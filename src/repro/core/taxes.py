@@ -1,0 +1,136 @@
+"""The "Three Taxes" analytical framework (paper §2.3), as a cost model.
+
+Quantifies, for a compute+collective pair executed under a given
+schedule, the three taxes the paper identifies:
+
+* kernel-launch tax  — fixed dispatch cost per kernel boundary,
+* bulk-synchronous tax — idle time from global barriers (serialization
+  of compute and wire time instead of overlap, plus skew wait),
+* inter-kernel data-locality tax — HBM round-trip of the intermediate
+  between producer and consumer kernels.
+
+The model is used three ways: (1) the pattern registry picks a fusion
+mode by comparing modeled schedules, (2) benchmarks report the tax
+decomposition next to measured latencies, (3) the §Perf loop sanity-
+checks napkin math against compiled-HLO deltas.
+
+All times in seconds; all sizes in bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """Per-chip hardware constants (defaults: TPU v5e)."""
+    flops: float = 197e12          # bf16 peak / chip
+    hbm_bw: float = 819e9          # bytes/s
+    ici_bw: float = 50e9           # bytes/s per link direction
+    kernel_launch: float = 3e-6    # host dispatch / executable transition
+    barrier_skew: float = 2e-6     # mean straggler wait per global barrier
+    vmem_bytes: int = 128 * 2**20
+
+
+V5E = HW()
+
+
+@dataclasses.dataclass(frozen=True)
+class OpShape:
+    """One compute+collective stage (e.g. AG + GEMM)."""
+    flops: float            # useful FLOPs of the compute
+    hbm_bytes: float        # compute operand+result HBM traffic
+    wire_bytes: float       # bytes each rank must move over ICI
+    intermediate_bytes: float  # producer->consumer intermediate size
+    steps: int = 1          # pipeline depth available for overlap (W)
+
+
+@dataclasses.dataclass(frozen=True)
+class TaxReport:
+    schedule: str
+    compute_s: float
+    wire_s: float
+    launch_tax_s: float
+    bulk_sync_tax_s: float
+    locality_tax_s: float
+    total_s: float
+
+    @property
+    def taxes_s(self) -> float:
+        return self.launch_tax_s + self.bulk_sync_tax_s + self.locality_tax_s
+
+
+def _base_times(op: OpShape, hw: HW):
+    t_compute = max(op.flops / hw.flops, op.hbm_bytes / hw.hbm_bw)
+    t_wire = op.wire_bytes / hw.ici_bw
+    return t_compute, t_wire
+
+
+def bsp_schedule(op: OpShape, hw: HW = V5E, n_kernels: int = 3) -> TaxReport:
+    """Compute-Wait-Collective-Wait-Compute: everything serializes."""
+    t_compute, t_wire = _base_times(op, hw)
+    launch = n_kernels * hw.kernel_launch
+    # two global barriers (before and after the collective)
+    skew = 2 * hw.barrier_skew
+    # no overlap: wire time is fully exposed
+    bulk = t_wire + skew
+    # intermediate goes HBM round trip (write by producer, read by consumer)
+    locality = 2 * op.intermediate_bytes / hw.hbm_bw
+    total = t_compute + bulk + launch + locality
+    return TaxReport("bsp", t_compute, t_wire, launch, bulk, locality, total)
+
+
+def ring_schedule(op: OpShape, hw: HW = V5E, n_kernels: int = 1,
+                  bidir: bool = False) -> TaxReport:
+    """Fine-grained ring: per-step wire hides under per-step compute."""
+    t_compute, t_wire = _base_times(op, hw)
+    if bidir:
+        t_wire = t_wire / 2
+    steps = max(op.steps, 1)
+    per_c, per_w = t_compute / steps, t_wire / steps
+    # pipeline: total = steps * max(per_c, per_w) + startup bubble
+    total_pipe = steps * max(per_c, per_w) + min(per_c, per_w)
+    launch = n_kernels * hw.kernel_launch
+    bulk = max(total_pipe - t_compute, 0.0)   # exposed (non-hidden) wire
+    locality = 0.0                            # tiles consumed in VMEM
+    total = t_compute + bulk + launch
+    return TaxReport("ring_bidir" if bidir else "ring",
+                     t_compute, t_wire, launch, bulk, locality, total)
+
+
+def fused_pallas_schedule(op: OpShape, hw: HW = V5E) -> TaxReport:
+    """Single fused kernel: one launch, in-VMEM handoff, overlapped DMA."""
+    rep = ring_schedule(op, hw, n_kernels=1)
+    return dataclasses.replace(rep, schedule="pallas")
+
+
+def pick_mode(op: OpShape, hw: HW = V5E) -> str:
+    """Policy used by fusion_mode='auto' (modeled-latency argmin)."""
+    cands = {
+        "bsp": bsp_schedule(op, hw).total_s,
+        "ring": ring_schedule(op, hw).total_s,
+        "ring_bidir": ring_schedule(op, hw, bidir=True).total_s,
+    }
+    return min(cands, key=cands.get)
+
+
+def ag_gemm_op_shape(M: int, K: int, N: int, W: int, itemsize: int = 2
+                     ) -> OpShape:
+    """The paper's AG+GEMM: A (M,K) K-sharded, B (K,N) replicated."""
+    flops = 2.0 * M * K * N
+    wire = (W - 1) / W * M * K * itemsize      # every rank receives W-1 shards
+    hbm = (M * K + K * N + M * N) * itemsize
+    inter = M * K * itemsize                   # gathered A
+    return OpShape(flops=flops, hbm_bytes=hbm, wire_bytes=wire,
+                   intermediate_bytes=inter, steps=W)
+
+
+def flash_decode_op_shape(B: int, H: int, D: int, S: int, KVH: int, W: int,
+                          itemsize: int = 2) -> OpShape:
+    """Seq-sharded flash decode: local attention + partial combine."""
+    flops = 2.0 * B * H * D * S / W * 2        # qk and pv per rank
+    hbm = B * (S // W) * KVH * D * 2 * itemsize
+    partial = B * H * (D + 2) * 4              # fp32 (o, m, l)
+    wire = (W - 1) * partial                   # ring pass
+    return OpShape(flops=flops, hbm_bytes=hbm, wire_bytes=wire,
+                   intermediate_bytes=partial, steps=W)

@@ -1,0 +1,125 @@
+"""Fault tolerance for 1000+ node runs.
+
+Pieces (wired together by launch/train.py):
+
+* **Preemption handling** — SIGTERM/SIGINT installs a flag; the train
+  loop checkpoints and exits cleanly at the next step boundary (TPU
+  preemption notice is delivered as SIGTERM).
+* **Checkpoint/restart** — see repro.checkpoint: async, atomic, with a
+  manifest; `--resume` restores params+optimizer+data-position.
+* **Elastic re-meshing** — checkpoints store *logical* (unsharded) arrays
+  per host shard; restore redistributes onto whatever mesh the restarted
+  job has (lose a pod → resume on (1,16,16) with the same global batch
+  via more grad-accumulation steps).
+* **Straggler mitigation** — per-step wall-time watchdog; persistent
+  outliers are reported, and the runner can be restarted excluding the
+  slow host (slot-backfill), since data sharding is host-count agnostic.
+* **Heartbeats** — each host appends (step, t, loss) to a heartbeat file;
+  a missing heartbeat past `timeout` marks the host dead for the
+  controller (here: logged; on a real cluster: triggers reschedule).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import threading
+import time
+from typing import Callable
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> graceful checkpoint-and-exit flag."""
+
+    def __init__(self):
+        self._flag = threading.Event()
+        self._installed = False
+
+    def install(self):
+        if self._installed:
+            return self
+        self._prev_term = signal.signal(signal.SIGTERM, self._handler)
+        self._prev_int = signal.signal(signal.SIGINT, self._handler)
+        self._installed = True
+        return self
+
+    def _handler(self, signum, frame):
+        self._flag.set()
+
+    @property
+    def preempted(self) -> bool:
+        return self._flag.is_set()
+
+    def trigger(self):      # for tests
+        self._flag.set()
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    path: str
+    host_id: int = 0
+    timeout_s: float = 300.0
+
+    def beat(self, step: int, **info):
+        rec = {"host": self.host_id, "step": step, "t": time.time(), **info}
+        with open(self.path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+    def dead_hosts(self, now: float | None = None) -> list[int]:
+        """Hosts whose last heartbeat is older than timeout."""
+        if not os.path.exists(self.path):
+            return []
+        now = now or time.time()
+        last: dict[int, float] = {}
+        with open(self.path) as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                    last[rec["host"]] = max(last.get(rec["host"], 0),
+                                            rec["t"])
+                except (json.JSONDecodeError, KeyError):
+                    continue
+        return sorted(h for h, t in last.items() if now - t > self.timeout_s)
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Flags steps (and hosts) that exceed k× the rolling median step time."""
+    factor: float = 2.0
+    window: int = 50
+    _times: list = dataclasses.field(default_factory=list)
+    slow_steps: list = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step was a straggler."""
+        times = self._times
+        times.append(dt)
+        if len(times) > self.window:
+            times.pop(0)
+        med = sorted(times)[len(times) // 2]
+        slow = len(times) >= 10 and dt > self.factor * med
+        if slow:
+            self.slow_steps.append((step, dt, med))
+        return slow
+
+    def summary(self) -> dict:
+        return {"n_slow": len(self.slow_steps),
+                "recent": self.slow_steps[-5:]}
+
+
+def plan_elastic_remesh(n_available_chips: int, prefer_model: int = 16
+                        ) -> tuple[int, ...]:
+    """Choose a (pod, data, model) mesh for however many chips survive.
+
+    Keeps the model axis (TP degree) stable — param sharding stays valid —
+    and absorbs losses on the pod/data axes, which only changes gradient
+    accumulation. E.g. 512 -> (2,16,16); 256 -> (1,16,16); 128 -> (1,8,16).
+    """
+    model = prefer_model
+    while model > 1 and n_available_chips % model:
+        model //= 2
+    rest = n_available_chips // model
+    if rest >= 32 and rest % 2 == 0:
+        return (rest // 16, 16, model) if rest % 16 == 0 else (2, rest // 2, model)
+    return (1, rest, model)

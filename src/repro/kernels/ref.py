@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a.astype(jnp.float32),
+                   b.astype(jnp.float32)).astype(a.dtype)
+
+
+def ag_gemm_ref(a_shards, b_full):
+    """a_shards: (W, M, K/W) the per-device shards (gathered on host);
+    b_full: (K, N). Oracle for the fused kernel's per-device output."""
+    W, M, k = a_shards.shape
+    a_full = jnp.concatenate([a_shards[s] for s in range(W)], axis=-1)
+    return jnp.dot(a_full.astype(jnp.float32),
+                   b_full.astype(jnp.float32)).astype(a_shards.dtype)
+
+
+def flash_decode_ref(q, k, v, cur_len, scale, window=None):
+    """Dense-softmax oracle over the first cur_len positions.
+    q: (B,H,D); k,v: (B,S,KVH,D) in GLOBAL position order."""
+    B, H, D = q.shape
+    S, KVH = k.shape[1], k.shape[2]
+    g = H // KVH
+    pos = jnp.arange(S)
+    valid = pos[None, :] < cur_len
+    if window is not None:
+        valid = valid & (pos[None, :] >= cur_len - window)
+    qg = q.astype(jnp.float32).reshape(B, KVH, g, D)
+    kT = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, kT) * scale
+    s = jnp.where(valid[:, None, None, :], s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    vT = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, vT)
+    return o.reshape(B, H, D).astype(q.dtype)

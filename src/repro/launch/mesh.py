@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+(16, 16) = one v5e pod (256 chips): axes (data, model).
+(2, 16, 16) = two pods (512 chips): axes (pod, data, model) — DP across
+pods, FSDP on `data`, TP/SP/EP on `model`.
+
+A function (not a module constant) so importing never touches jax device
+state; the dry-run sets XLA_FLAGS for 512 host devices *before* calling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for_devices(n: int, model: int = 16, pods: int = 1):
+    """Elastic variant: whatever chip count we actually have."""
+    assert n % (model * pods) == 0
+    data = n // (model * pods)
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over local (possibly fake) devices, for tests/examples."""
+    return jax.make_mesh((data, model), ("data", "model"))

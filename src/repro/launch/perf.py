@@ -1,0 +1,199 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver.
+
+Each experiment = (cell, variant-name, hypothesis, change) run through
+the same lowering+roofline pipeline as the baseline dry-run; records land
+in ``experiments/perf/`` and are summarized into EXPERIMENTS.md §Perf.
+
+The three hillclimbed cells (chosen per the assignment):
+  * mistral-large-123b × decode_32k  — most representative of the paper
+    (Flash Decode, 96 q heads × hd 128 = the paper's own eval config)
+  * phi3-mini-3.8b × train_4k        — worst baseline roofline fraction
+  * olmoe-1b-7b × train_4k           — most collective-bound (EP MoE)
+
+Usage: python -m repro.launch.perf --cell mistral_decode   (or phi3/olmoe/all)
+"""
+import argparse
+import json
+
+from repro.launch.dryrun import extrapolate_cell, lower_cell
+
+PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "experiments", "perf")
+
+# variant -> (method, kwargs)
+EXPERIMENTS = {
+    "mistral_decode": {
+        "arch": "mistral-large-123b", "shape": "decode_32k",
+        "method": "lower",     # decode: 2-layer extrapolation basis too
+        "variants": {
+            "baseline_auto": dict(fusion_mode="auto"),
+            "paper_bsp": dict(fusion_mode="bsp"),
+            "fused_ring": dict(fusion_mode="ring"),
+        },
+        "hypothesis": {
+            "paper_bsp": "explicit AG-then-combine reproduces the paper's "
+                         "RCCL baseline structure",
+            "fused_ring": "ownership-aware in-shard cache update + ring "
+                          "combine removes the XLA scatter collectives "
+                          "(~4k collective-permutes) entirely",
+        },
+    },
+    "phi3_train": {
+        "arch": "phi3-mini-3.8b", "shape": "train_4k",
+        "method": "extrapolate",
+        "variants": {
+            "baseline_auto": dict(fusion_mode="auto"),
+            "paper_bsp": dict(fusion_mode="bsp"),
+            "no_fsdp": dict(fusion_mode="auto",
+                            overrides={"sharding_overrides":
+                                       (("embed", ()),)}),
+            "fused_ring": dict(fusion_mode="ring"),
+            "fused_ring_no_fsdp": dict(
+                fusion_mode="ring",
+                overrides={"sharding_overrides": (("embed", ()),)}),
+            "remat_dots_no_fsdp": dict(
+                fusion_mode="auto",
+                overrides={"sharding_overrides": (("embed", ()),),
+                           "remat_policy": "dots"}),
+            "head_embed_fix": dict(fusion_mode="auto"),
+            "head_fix_ring": dict(fusion_mode="ring"),
+            # remat(shard_map) under unrolled layers trips an XLA SPMD
+            # PartitionId limit; measure the ring/auto pair without remat
+            "auto_no_remat": dict(fusion_mode="auto",
+                                  overrides={"remat": False}),
+            "ring_no_remat": dict(fusion_mode="ring",
+                                  overrides={"remat": False}),
+        },
+        "hypothesis": {
+            "no_fsdp": "3.8B params fit per-chip without FSDP on a 256-chip "
+                       "pod; dropping it removes per-layer weight "
+                       "all-gathers + grad reduce-scatters over `data`",
+            "fused_ring": "ring collective-matmul turns SP all-gathers into "
+                          "overlappable collective-permutes (paper §4.1)",
+            "remat_dots_no_fsdp": "saving matmul outputs (recompute only "
+                                  "elementwise) removes the remat fwd "
+                                  "recompute: predicted HLO flops x0.75, "
+                                  "useful_fraction 0.8 -> ~1.0",
+            "head_embed_fix": "logits vocab-sharding conflict + whole-table "
+                              "embed gathers fixed (code change): predicted "
+                              "-1.2GB/step wire for 2L, less full-V logits "
+                              "memory",
+            "head_fix_ring": "ring collective-matmul on top of the head fix "
+                             "(check_vma grad fix): SP gathers become "
+                             "overlappable per-step permutes",
+        },
+    },
+    "olmoe_train": {
+        "arch": "olmoe-1b-7b", "shape": "train_4k",
+        "method": "extrapolate",
+        "variants": {
+            "baseline_auto": dict(fusion_mode="auto"),
+            "paper_bsp": dict(fusion_mode="bsp"),
+            "experts_tp": dict(
+                fusion_mode="auto",
+                overrides={"sharding_overrides":
+                           (("experts", ()), ("expert_mlp", ("model",)))}),
+            "experts_tp_no_fsdp": dict(
+                fusion_mode="auto",
+                overrides={"sharding_overrides":
+                           (("experts", ()), ("expert_mlp", ("model",)),
+                            ("embed", ()))}),
+            "head_embed_fix": dict(fusion_mode="auto"),
+        },
+        "hypothesis": {
+            "experts_tp": "top-8 of 64 experts moves 8x token activations "
+                          "through EP all-to-alls; replicating experts over "
+                          "`model` and TP-sharding each expert's d_ff moves "
+                          "WEIGHTS instead (E*d*f << B*T*k*D per chip) — "
+                          "predicted ~5x less wire",
+        },
+    },
+}
+
+
+def run(cell_name: str, force: bool = False, only_variant: str | None = None):
+    os.makedirs(PERF_DIR, exist_ok=True)
+    exp = EXPERIMENTS[cell_name]
+    results = {}
+    for variant, kw in exp["variants"].items():
+        if only_variant and variant != only_variant:
+            continue
+        path = os.path.join(PERF_DIR, f"{cell_name}__{variant}.json")
+        if os.path.exists(path) and not force:
+            with open(path) as f:
+                rec = json.load(f)
+            if rec.get("status") == "ok":
+                results[variant] = rec
+                print(f"[perf] cached {cell_name}/{variant}")
+                continue
+        print(f"[perf] running {cell_name}/{variant} ...")
+        try:
+            if exp["method"] == "extrapolate":
+                rec = extrapolate_cell(exp["arch"], exp["shape"],
+                                       multi_pod=False, **kw)
+            else:
+                # decode: use 4-layer basis + extrapolation for speed
+                rec = extrapolate_cell(exp["arch"], exp["shape"],
+                                       multi_pod=False, **kw)
+            rec["variant"] = variant
+            rec["hypothesis"] = exp["hypothesis"].get(variant, "baseline")
+        except Exception as e:
+            import traceback
+            rec = {"status": "error", "variant": variant,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-3000:]}
+            print(f"[perf] ERROR {variant}: {str(e)[:200]}")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        results[variant] = rec
+        import jax
+        jax.clear_caches()   # avoid XLA copy-opcode CHECK crash across variants
+    _report(cell_name, results)
+    return results
+
+
+def _report(cell_name, results):
+    print(f"\n== {cell_name} ==")
+    base = results.get("baseline_auto", {}).get("roofline")
+    for variant, rec in results.items():
+        if rec.get("status") != "ok":
+            print(f"  {variant:22s} {rec.get('status')}")
+            continue
+        r = rec["roofline"]
+        line = (f"  {variant:22s} compute={r['compute_s']:.3e} "
+                f"mem={r['memory_s']:.3e} coll={r['collective_s']:.3e} "
+                f"dom={r['dominant']:10s} frac={r['roofline_fraction']:.3f}")
+        if base and variant != "baseline_auto":
+            dd = base["collective_s"] / max(r["collective_s"], 1e-12)
+            line += f"  (coll x{dd:.2f} better)" if dd > 1 else \
+                    f"  (coll x{1/dd:.2f} worse)"
+        print(line)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all",
+                    choices=tuple(EXPERIMENTS) + ("all",))
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args()
+    cells = list(EXPERIMENTS) if args.cell == "all" else [args.cell]
+    for c in cells:
+        if args.report:
+            results = {}
+            for v in EXPERIMENTS[c]["variants"]:
+                path = os.path.join(PERF_DIR, f"{c}__{v}.json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        results[v] = json.load(f)
+            _report(c, results)
+            continue
+        run(c, force=args.force, only_variant=args.variant)
+
+
+if __name__ == "__main__":
+    main()

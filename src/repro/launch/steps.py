@@ -1,0 +1,179 @@
+"""Jittable train / serve step functions + their input specs.
+
+Shared by the real launchers (train.py / serve.py) and the dry-run
+(which lowers them against ShapeDtypeStructs — no allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import context as dctx
+from repro.distributed.sharding_rules import Rules, rules_for
+from repro.models import lm, transformer
+from repro.models.module import axes_tree, shapes_tree
+from repro.optim import adamw
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim),
+                                                   jnp.bfloat16),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+               "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_tokens, cfg.frontend_dim), jnp.bfloat16)
+        return out
+    # decode: one new token against a KV cache of seq_len
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+            "state": decode_state_specs(cfg, B, S)}
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int):
+    caches = transformer.init_caches  # reuse the shape logic via eval_shape
+    spec = jax.eval_shape(
+        lambda: {"caches": transformer.init_caches(cfg, batch, max_len,
+                                                   cfg.dtype),
+                 "cur_len": jnp.int32(0)})
+    return spec
+
+
+def param_specs(cfg: ModelConfig):
+    return shapes_tree(lm.lm_spec(cfg))
+
+
+# ----------------------------------------------------------- sharding trees
+def batch_sharding(rules: Rules, specs) -> Any:
+    def spec_of(path_leaf):
+        return P(("pod", "data") if "pod" in rules.mesh.shape else ("data",))
+    def one(x):
+        nd = len(x.shape)
+        base = ("pod", "data") if "pod" in rules.mesh.shape else ("data",)
+        # batch is always dim 0; shard it, replicate the rest
+        axes_ok = x.shape[0] % rules._mesh_size(tuple(
+            a for a in base if rules.mesh.shape.get(a, 1) > 1)) == 0
+        return NamedSharding(rules.mesh,
+                             P(base if axes_ok else None,
+                               *([None] * (nd - 1))))
+    return jax.tree.map(one, specs)
+
+
+def param_shardings(cfg: ModelConfig, rules: Rules):
+    return rules.shardings(axes_tree(lm.lm_spec(cfg)), param_specs(cfg))
+
+
+def opt_state_shardings(cfg: ModelConfig, rules: Rules, params_sh):
+    return {"m": params_sh, "v": params_sh,
+            "step": NamedSharding(rules.mesh, P())}
+
+
+def decode_state_shardings(cfg: ModelConfig, rules: Rules, state_specs):
+    mesh = rules.mesh
+    def one_path(path, x):
+        nd = len(x.shape)
+        names = [str(getattr(k, "key", "")) for k in path]
+        if ("k" in names or "v" in names) and nd >= 4:
+            # attention KV cache (..., B, S, KVH, D), possibly with leading
+            # stacked-layer dims: batch on dp, seq on model
+            lead = nd - 4
+            ok_s = x.shape[lead + 1] % mesh.shape.get("model", 1) == 0
+            ok_b = x.shape[lead] % _dp(mesh) == 0
+            return NamedSharding(mesh, P(
+                *(None,) * lead,
+                _dp_axes(mesh) if ok_b else None,
+                "model" if ok_s else None, None, None))
+        if nd >= 1 and x.shape and x.shape[0] > 1:
+            # stacked-layer states: dim1 is batch if present
+            spec = [None] * nd
+            if nd >= 2 and x.shape[1] % _dp(mesh) == 0:
+                spec[1] = _dp_axes(mesh)
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+    flat = jax.tree_util.tree_flatten_with_path(state_specs)
+    leaves = [one_path(p, l) for p, l in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def _dp(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _dp_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+# ------------------------------------------------------------------- steps
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return lm.loss_fn(p, batch, cfg)
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, om = adamw.apply_updates(params, grads, opt_state,
+                                                    opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, metrics = lm.loss_fn(params, batch, cfg)
+        return {"loss": loss, **metrics}
+    return eval_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, state):
+        logits, new_state = lm.decode_step(params, token, state, cfg)
+        return logits, new_state
+    return serve_step
+
+
+# --------------------------------------------------------------- jit plumbing
+def jitted_train_step(cfg, mesh, opt_cfg=None, fusion_mode="auto",
+                      donate=True):
+    rules = rules_for(cfg, mesh)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    ctx = dctx.make_context(mesh, fusion_mode=fusion_mode, rules=rules)
+    psh = param_shardings(cfg, rules)
+    osh = opt_state_shardings(cfg, rules, psh)
+    step_fn = make_train_step(cfg, opt_cfg)
+
+    def wrapped(params, opt_state, batch):
+        with dctx.use(ctx):
+            return step_fn(params, opt_state, batch)
+
+    jitted = jax.jit(
+        wrapped,
+        in_shardings=(psh, osh, None),
+        out_shardings=(psh, osh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, ctx, psh, osh
+
+
+def jitted_serve_step(cfg, mesh, fusion_mode="auto"):
+    rules = rules_for(cfg, mesh)
+    ctx = dctx.make_context(mesh, fusion_mode=fusion_mode, rules=rules)
+    psh = param_shardings(cfg, rules)
+    step_fn = make_serve_step(cfg)
+
+    def wrapped(params, token, state):
+        with dctx.use(ctx):
+            return step_fn(params, token, state)
+
+    return wrapped, ctx, psh

@@ -1,0 +1,89 @@
+"""Shared layers: norms, embeddings, rotary embeddings, dense projections."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import Param
+from repro.distributed import context as dctx
+from repro.distributed.sharding_rules import constrain
+
+
+# ---------------------------------------------------------------- norms
+def norm_spec(d_model: int, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": Param((d_model,), init="ones", axes=("embed_no_fsdp",))}
+    return {"scale": Param((d_model,), init="ones", axes=("embed_no_fsdp",)),
+            "bias": Param((d_model,), init="zeros", axes=("embed_no_fsdp",))}
+
+
+def apply_norm(params, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = ((x - mu) * jax.lax.rsqrt(var + eps)
+             * params["scale"].astype(jnp.float32)
+             + params["bias"].astype(jnp.float32))
+    return y.astype(dtype)
+
+
+# ------------------------------------------------------------ embeddings
+def embed_spec(vocab: int, d_model: int):
+    # input table: rows over `data` (FSDP storage), cols over `model` —
+    # the take() then lowers to a masked local gather + small psum over
+    # `data` instead of an all-gather of the whole table (§Perf phi3
+    # iteration 3). The unembed head keeps ("vocab","embed").
+    return {"table": Param((vocab, d_model), init="normal", scale=0.02,
+                           axes=("in_vocab", "in_embed"))}
+
+
+def apply_embed(params, token_ids, dtype):
+    # Plain take: under jit+SPMD, XLA partitions the gather on the sharded
+    # table (vocab-sharded -> one-hot-free masked gather + all-reduce).
+    return jnp.take(params["table"], token_ids, axis=0).astype(dtype)
+
+
+def apply_unembed(params, x, dtype=jnp.float32):
+    return jnp.einsum("...d,vd->...v", x, params["table"]).astype(dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    return inv  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim), positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- dense
+def dense_spec(d_in: int, d_out: int, axes: tuple[str | None, str | None],
+               init: str = "scaled"):
+    return {"kernel": Param((d_in, d_out), init=init, axes=axes)}
+
+
+def apply_dense(params, x, out_logical: str | None = None):
+    """y = x @ W. The TP collectives around this op are where the paper's
+    technique lives; the dispatch happens in ``repro.core.patterns`` — this
+    plain version is the local building block (and the BSP path, where XLA
+    inserts the collectives)."""
+    y = jnp.einsum("...k,kn->...n", x, params["kernel"].astype(x.dtype))
+    if out_logical is not None:
+        ctx = dctx.current()
+        y = constrain(y, ctx.rules, "batch", *(None,) * (y.ndim - 2),
+                      out_logical)
+    return y

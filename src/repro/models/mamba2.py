@@ -1,0 +1,185 @@
+"""Mamba2 (SSD) block — the zamba2 backbone.
+
+Chunked SSD algorithm (the "minimal SSD" formulation): within a chunk the
+state-space mixing is a masked quadratic form (parallel, MXU-friendly);
+across chunks a `lax.scan` carries the (heads, state, headdim) SSM state.
+Decode is the exact single-step recurrence with a rolling conv state.
+
+The paper's technique is *inapplicable* to the scan itself (state is
+batch-local, no collective adjacent to the recurrence — see DESIGN.md
+§Arch-applicability); in/out projections still go through the pattern
+registry like every other projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import patterns
+from repro.models.module import Param
+
+
+def mamba_spec(cfg):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = d_in // 64                       # headdim 64
+    conv_ch = d_in + 2 * n                # x + B + C (ngroups=1)
+    return {
+        # order: [z, x, B, C, dt]
+        "in_proj": Param((d, 2 * d_in + 2 * n + nh), init="scaled",
+                         axes=("embed", "ssm_inner")),
+        "conv_w": Param((cfg.ssm_conv_width, conv_ch), init="scaled",
+                        axes=("conv_width", None)),
+        "conv_b": Param((conv_ch,), init="zeros", axes=(None,)),
+        "A_log": Param((nh,), init="uniform", scale=1.0, axes=(None,)),
+        "dt_bias": Param((nh,), init="zeros", axes=(None,)),
+        "D": Param((nh,), init="ones", axes=(None,)),
+        "norm_scale": Param((d_in,), init="ones", axes=(None,)),
+        "out_proj": Param((d_in, d), init="scaled", axes=("ssm_inner", "embed")),
+    }
+
+
+def _split(cfg, zxbcdt):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    nh = d_in // 64
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, x, B, C, dt, d_in, n, nh
+
+
+def _dconv(x, w, b):
+    """Causal depthwise conv over seq. x: (B, L, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """x:(b,l,h,p) dt:(b,l,h) A:(h,) Bm,Cm:(b,l,n). Returns (y, h_last).
+
+    h_t = exp(A·dt_t)·h_{t-1} + dt_t·(B_t ⊗ x_t);  y_t = C_t·h_t
+    """
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    c = min(chunk, l)
+    assert l % c == 0
+    nc = l // c
+
+    xr = x.reshape(b, nc, c, h, p)
+    dtr = dt.reshape(b, nc, c, h)
+    Br = Bm.reshape(b, nc, c, n)
+    Cr = Cm.reshape(b, nc, c, n)
+
+    dA = dtr * A[None, None, None, :]                     # (b,nc,c,h) ≤ 0
+    cs = jnp.cumsum(dA, axis=2)                           # inclusive cumsum
+
+    # --- intra-chunk (diagonal blocks) ---
+    # decay(i,j) = exp(cs_i - cs_j) for j <= i (strictly applying state decay
+    # between step j and i; cs is inclusive so cs_i - cs_j = sum_{j+1..i}).
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]    # (b,nc,i,j,h)
+    ii, jj = jnp.tril_indices(c)
+    mask = jnp.zeros((c, c), bool).at[ii, jj].set(True)
+    # mask BEFORE exp: the upper triangle has diff > 0 (can overflow to
+    # +inf), and where(mask, exp(diff), 0) propagates NaN through the
+    # UNSELECTED branch in backward (0 * inf). exp(-inf) = 0 exactly.
+    L = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+    cb = jnp.einsum("bzin,bzjn->bzij", Cr, Br)            # (b,nc,i,j)
+    att = cb[..., None] * L * dtr[:, :, None, :, :]       # (b,nc,i,j,h)
+    y_diag = jnp.einsum("bzijh,bzjhp->bzihp", att, xr)
+
+    # --- chunk end-states ---
+    # S_z = sum_j exp(cs_end - cs_j) * dt_j * B_j ⊗ x_j
+    dec_end = jnp.exp(cs[:, :, -1:, :] - cs)              # (b,nc,c,h)
+    w = dec_end * dtr                                     # (b,nc,c,h)
+    S = jnp.einsum("bzch,bzcn,bzchp->bzhnp", w, Br, xr)   # (b,nc,h,n,p)
+
+    # --- inter-chunk recurrence (scan) ---
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))            # (b,nc,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), x.dtype)
+
+    def step(carry, inp):
+        S_z, dec = inp                                    # (b,h,n,p),(b,h)
+        new = carry * dec[:, :, None, None] + S_z
+        return new, carry                                 # emit state BEFORE chunk
+
+    (h_last, h_prevs) = lax.scan(
+        step, h0, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (b,nc,h,n,p)
+
+    # --- off-diagonal contribution: y_i += C_i · exp(cs_i) · H_prev ---
+    dec_in = jnp.exp(cs)                                  # (b,nc,c,h)
+    y_off = jnp.einsum("bzcn,bzhnp,bzch->bzchp", Cr, h_prevs, dec_in)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, h_last
+
+
+def apply_mamba(params, x, cfg, chunk: int = 64):
+    """Train/prefill. x: (B, L, d) -> (B, L, d)."""
+    zxbcdt = patterns.project_up(x, params["in_proj"])
+    z, xs, Bm, Cm, dt, d_in, n, nh = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv = jax.nn.silu(_dconv(conv_in, params["conv_w"].astype(x.dtype),
+                              params["conv_b"].astype(x.dtype)))
+    xs, Bm, Cm = jnp.split(conv, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(*xs.shape[:-1], nh, 64).astype(jnp.float32)
+    y, _ = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                       Cm.astype(jnp.float32), chunk)
+    y = y + xh * params["D"][None, None, :, None]
+    y = y.reshape(*xs.shape[:-1], d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    # grouped RMSNorm
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y = (y32 * lax.rsqrt(var + 1e-6)
+         * params["norm_scale"][None, None, :]).astype(x.dtype)
+    return patterns.project_down(y, params["out_proj"])
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    nh = d_in // 64
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, n, 64), jnp.float32),
+    }
+
+
+def apply_mamba_decode(params, x, cache, cfg):
+    """One-token decode. x: (B, 1, d). Returns (y (B,1,d), new cache)."""
+    zxbcdt = jnp.einsum("bod,dn->bon", x, params["in_proj"].astype(x.dtype))
+    z, xs, Bm, Cm, dt, d_in, n, nh = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)      # (B,1,C)
+    hist = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,K,C)
+    w = params["conv_w"].astype(x.dtype)
+    conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w)
+                       + params["conv_b"].astype(x.dtype))[:, None, :]
+    new_conv = hist[:, 1:, :]
+    xs, Bm, Cm = jnp.split(conv, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])[:, 0]  # (B,nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs[:, 0].reshape(-1, nh, 64).astype(jnp.float32)  # (B,nh,64)
+    dec = jnp.exp(dt * A[None, :])                          # (B,nh)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, Bm[:, 0].astype(jnp.float32), xh)
+    ssm = cache["ssm"] * dec[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), ssm)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(-1, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y = (y32 * lax.rsqrt(var + 1e-6)
+         * params["norm_scale"][None, None, :]).astype(x.dtype)
+    out = patterns.project_k_sharded(y, params["out_proj"])
+    return out, {"conv": new_conv, "ssm": ssm}

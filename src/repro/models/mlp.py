@@ -1,0 +1,59 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GeLU / ReLU² (RWKV channel-mix)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import patterns
+from repro.models.module import Param
+
+
+def mlp_spec(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wg": Param((d, f), init="scaled", axes=("embed", "mlp")),
+            "wu": Param((d, f), init="scaled", axes=("embed", "mlp")),
+            "wd": Param((f, d), init="scaled", axes=("mlp", "embed")),
+        }
+    return {
+        "wu": Param((d, f), init="scaled", axes=("embed", "mlp")),
+        "wd": Param((f, d), init="scaled", axes=("mlp", "embed")),
+    }
+
+
+def _act(cfg, g):
+    if cfg.act == "swiglu":
+        return jax.nn.silu(g)
+    if cfg.act == "geglu":
+        return jax.nn.gelu(g, approximate=True)
+    if cfg.act == "gelu":
+        return jax.nn.gelu(g, approximate=True)
+    if cfg.act == "relu2":
+        return jnp.square(jax.nn.relu(g))
+    raise ValueError(cfg.act)
+
+
+def apply_mlp(params, x, cfg):
+    """x: (B, S, d) sequence-sharded. Up-projections are AG+GEMM sites,
+    down-projection is the GEMM+RS site (paper §4.1 / §6.2)."""
+    if cfg.act in ("swiglu", "geglu"):
+        g = patterns.project_up(x, params["wg"])
+        u = patterns.project_up(x, params["wu"])
+        h = _act(cfg, g) * u
+    else:
+        h = _act(cfg, patterns.project_up(x, params["wu"]))
+    return patterns.project_down(h, params["wd"])
+
+
+def apply_mlp_decode(params, x, cfg):
+    """Decode (S=1): sequence sharding is meaningless; row-parallel with
+    the paper's K-sharded AG+GEMM on the down-projection."""
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", x, params["wg"].astype(x.dtype))
+        u = jnp.einsum("...d,df->...f", x, params["wu"].astype(x.dtype))
+        h = _act(cfg, g) * u
+    else:
+        h = _act(cfg, jnp.einsum("...d,df->...f", x,
+                                 params["wu"].astype(x.dtype)))
+    return patterns.project_k_sharded(h, params["wd"])

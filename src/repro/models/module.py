@@ -1,0 +1,132 @@
+"""Minimal functional parameter/module system.
+
+No flax in this environment, so we roll a small, explicit system:
+
+* A *param tree* is a nested dict of ``jax.Array`` leaves.
+* A parallel *axes tree* (same structure) holds a tuple of **logical axis
+  names** per leaf (e.g. ``("embed", "mlp")``). Logical names are mapped
+  to mesh axes by ``repro.distributed.sharding_rules``.
+* Initializers are declared with :class:`Param` and materialized by
+  :func:`init_tree`, which threads a PRNG key deterministically through
+  the tree (sorted key order) so initialization is reproducible and
+  shardable under jit.
+
+Keeping params as plain pytrees means every JAX transform (jit, grad,
+shard_map, scan-stacking) works without adapters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """Declaration of one parameter leaf."""
+
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"          # normal | zeros | ones | scaled | uniform
+    scale: float | None = None     # stddev override; default fan-in scaling
+    axes: tuple[str | None, ...] = ()  # logical axis names, len == ndim
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank")
+
+
+def _materialize(key: jax.Array, p: Param) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "normal":
+        scale = p.scale if p.scale is not None else 0.02
+        return (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(p.dtype)
+    if p.init == "scaled":  # fan-in scaled (truncated-normal-ish)
+        fan_in = p.shape[0] if p.shape else 1
+        scale = p.scale if p.scale is not None else 1.0
+        std = scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(p.dtype)
+    if p.init == "uniform":
+        scale = p.scale if p.scale is not None else 1.0
+        return (jax.random.uniform(key, p.shape, jnp.float32, -scale, scale)
+                ).astype(p.dtype)
+    raise ValueError(f"unknown init {p.init!r}")
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def init_tree(key: jax.Array, spec: PyTree) -> PyTree:
+    """Materialize a tree of :class:`Param` declarations into arrays."""
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=is_param)
+    keys = jax.random.split(key, len(leaves)) if leaves else []
+    out = [_materialize(k, p) if is_param(p) else p
+           for k, p in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def axes_tree(spec: PyTree) -> PyTree:
+    """Extract the logical-axes tree (same structure as the param tree)."""
+    return jax.tree.map(lambda p: p.axes if is_param(p) else None, spec,
+                        is_leaf=is_param)
+
+
+def shapes_tree(spec: PyTree) -> PyTree:
+    """ShapeDtypeStructs for dry-run lowering without allocation."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype) if is_param(p) else p,
+        spec, is_leaf=is_param)
+
+
+def param_count(tree: PyTree) -> int:
+    """Total element count of a param tree (works on specs or arrays)."""
+    def _n(x):
+        if is_param(x):
+            return int(np.prod(x.shape)) if x.shape else 1
+        if hasattr(x, "shape"):
+            return int(np.prod(x.shape)) if x.shape else 1
+        return 0
+    return sum(_n(l) for l in jax.tree.leaves(tree, is_leaf=is_param))
+
+
+def param_bytes(tree: PyTree) -> int:
+    def _b(x):
+        shape = getattr(x, "shape", ())
+        dtype = getattr(x, "dtype", jnp.float32)
+        return int(np.prod(shape)) * jnp.dtype(dtype).itemsize if shape else 0
+    return sum(_b(l) for l in jax.tree.leaves(tree, is_leaf=is_param))
+
+
+def stack_layer_specs(spec: PyTree, n_layers: int, layer_axis: str = "layers"
+                      ) -> PyTree:
+    """Turn a single-layer Param spec into a scan-stacked spec.
+
+    Adds a leading ``n_layers`` dim (logical axis ``layer_axis``) to every
+    leaf so the whole stack initializes as one tree and runs under
+    ``jax.lax.scan``.
+    """
+    def _stack(p: Param) -> Param:
+        return Param(shape=(n_layers,) + p.shape, dtype=p.dtype, init=p.init,
+                     scale=p.scale, axes=(layer_axis,) + tuple(p.axes))
+    return jax.tree.map(_stack, spec, is_leaf=is_param)
+
+
+def cast_tree(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def tree_equal_structure(a: PyTree, b: PyTree) -> bool:
+    return jax.tree.structure(a) == jax.tree.structure(b)

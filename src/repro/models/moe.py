@@ -1,0 +1,127 @@
+"""Mixture-of-Experts layer (olmoe 64e/top-8, mixtral 8e/top-2).
+
+Sort-based capacity routing (MegaBlocks-lite, no ragged ops needed):
+
+1. top-k expert choice per token, per batch row (rows are the routing
+   groups so routing never crosses the data-parallel shard boundary);
+2. stable argsort by expert id; position-within-expert = offset from the
+   segment start; tokens past capacity C drop (standard capacity policy);
+3. gather into a dense (B, E, C, D) dispatch buffer; per-expert GEMMs are
+   one batched einsum — this is where expert parallelism shards (E on the
+   `model` axis when divisible, d_ff otherwise, e.g. mixtral E=8 < 16);
+4. scatter-combine with gate weights.
+
+Aux load-balance loss (Switch-style) is returned alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed import context as dctx
+from repro.distributed.sharding_rules import constrain
+from repro.models.module import Param
+
+
+def moe_spec(cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe_num_experts
+    return {
+        "router": Param((d, E), init="scaled", axes=("embed", None)),
+        "wg": Param((E, d, f), init="scaled",
+                    axes=("experts", "embed", "expert_mlp")),
+        "wu": Param((E, d, f), init="scaled",
+                    axes=("experts", "embed", "expert_mlp")),
+        "wd": Param((E, f, d), init="scaled",
+                    axes=("experts", "expert_mlp", "embed")),
+    }
+
+
+def capacity(cfg, tokens_per_group: int) -> int:
+    c = int(cfg.moe_top_k * tokens_per_group / cfg.moe_num_experts
+            * cfg.moe_capacity_factor)
+    c = max(1, c)
+    if c >= 8:
+        c = -(-c // 8) * 8      # round up to 8 for TPU lanes
+    # decode (T=1): keep C tiny — a C=8 floor would 8x the combine
+    # all-reduce for one token
+    return min(c, max(1, cfg.moe_top_k * tokens_per_group))
+
+
+def route(x, router_w, cfg):
+    """x: (B, T, D). Returns dispatch/combine metadata."""
+    B, T, D = x.shape
+    E, K = cfg.moe_num_experts, cfg.moe_top_k
+    C = capacity(cfg, T)
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = lax.top_k(probs, K)                      # (B, T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(B, T * K)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)      # (B, T*K)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # position within expert segment
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)
+    seg_start_of = jax.vmap(jnp.take)(starts, sorted_e)    # (B, T*K)
+    seg_pos = jnp.arange(T * K)[None, :] - seg_start_of    # slot within expert
+    keep = seg_pos < C
+
+    # dispatch indices: for (e, c) -> flat choice index (or T*K = dummy)
+    cand = starts[:, :, None] + jnp.arange(C)[None, None, :]   # (B, E, C)
+    ends = jnp.concatenate([starts[:, 1:],
+                            jnp.full((B, 1), T * K)], axis=1)
+    valid = cand < ends[:, :, None]
+    cand = jnp.minimum(cand, T * K - 1)
+    flat_choice = jnp.take_along_axis(
+        order, cand.reshape(B, E * C), axis=-1).reshape(B, E, C)
+    token_of_slot = flat_choice // K                        # (B, E, C)
+
+    # combine-side: each (t, k) choice -> (expert, slot, kept)
+    inv = jnp.argsort(order, axis=-1, stable=True)          # flat -> sorted pos
+    slot_of_flat = jnp.take_along_axis(seg_pos, inv, axis=-1)
+    kept_flat = jnp.take_along_axis(keep, inv, axis=-1)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    top1 = jax.nn.one_hot(eidx[..., 0], E)
+    fe = jnp.mean(top1, axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+
+    return dict(token_of_slot=token_of_slot, slot_valid=valid,
+                expert_of_flat=flat_e, slot_of_flat=slot_of_flat,
+                kept_flat=kept_flat, gate=gate, aux=aux, C=C)
+
+
+def apply_moe(params, x, cfg):
+    """x: (B, T, D) -> (out (B, T, D), aux_loss scalar)."""
+    ctx = dctx.current()
+    B, T, D = x.shape
+    E, K = cfg.moe_num_experts, cfg.moe_top_k
+    r = route(x, params["router"], cfg)
+    C = r["C"]
+
+    # dispatch: (B, E, C, D)
+    xe = jax.vmap(lambda xb, tix: xb[tix])(x, r["token_of_slot"])
+    xe = jnp.where(r["slot_valid"][..., None], xe, 0.0)
+    xe = constrain(xe, ctx.rules, "batch", "experts", None, None)
+
+    w_dtype = x.dtype
+    g = jnp.einsum("becd,edf->becf", xe, params["wg"].astype(w_dtype))
+    u = jnp.einsum("becd,edf->becf", xe, params["wu"].astype(w_dtype))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, ctx.rules, "batch", "experts", None, "expert_mlp")
+    ye = jnp.einsum("becf,efd->becd", h, params["wd"].astype(w_dtype))
+    ye = constrain(ye, ctx.rules, "batch", "experts", None, None)
+
+    # combine: gather each (t,k)'s expert output, weight by gate
+    ye_flat = ye.reshape(B, E * C, D)
+    eof = r["expert_of_flat"]                               # (B, T*K)
+    sof = jnp.minimum(r["slot_of_flat"], C - 1)
+    lin = eof * C + sof
+    vals = jax.vmap(lambda yb, ix: yb[ix])(ye_flat, lin)    # (B, T*K, D)
+    vals = jnp.where(r["kept_flat"][..., None], vals, 0.0)
+    vals = vals.reshape(B, T, K, D)
+    out = jnp.einsum("btkd,btk->btd", vals, r["gate"].astype(vals.dtype))
+    return out.astype(x.dtype), r["aux"]

@@ -1,0 +1,188 @@
+"""RWKV6 "Finch" block: attention-free time-mix with data-dependent decay.
+
+Recurrence per head (dk = dv = 64):
+    out_t = r_t · (S_{t-1} + diag(u)·k_t ⊗ v_t)
+    S_t   = diag(w_t)·S_{t-1} + k_t ⊗ v_t
+with w_t = exp(-exp(w0 + lora(x_shift_t))) — the data-dependent decay that
+defines Finch.
+
+Training/prefill uses a chunked-parallel form (GLA-style): within a chunk
+the pairwise-decay quadratic form, across chunks a scanned state. The
+factorized within-chunk term is numerically safe because the per-step
+log-decay is clamped to [-CLAMP, 0) and chunks are short (CHUNK=16,
+max exponent CHUNK·CLAMP << fp32 overflow); contributions beyond the
+clamp are < e^-69 and vanish anyway. Decode is the exact recurrence.
+
+Technique applicability: the WKV recurrence is batch-local — there is no
+cross-device partial-softmax combine to fuse (DESIGN.md
+§Arch-applicability). The channel-mix FFN projections still use the
+pattern registry.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import patterns
+from repro.models.module import Param
+from repro.models.layers import apply_norm, norm_spec
+
+HEAD = 64
+CHUNK = 16
+CLAMP = 4.6  # per-step |log decay| bound
+
+
+def rwkv_spec(cfg):
+    d = cfg.d_model
+    nh = d // HEAD
+    lora = 64
+    return {
+        "ln_t": norm_spec(d, "layernorm"),
+        "ln_c": norm_spec(d, "layernorm"),
+        # time-mix
+        "mu_r": Param((d,), init="uniform", scale=0.5, axes=(None,)),
+        "mu_k": Param((d,), init="uniform", scale=0.5, axes=(None,)),
+        "mu_v": Param((d,), init="uniform", scale=0.5, axes=(None,)),
+        "mu_g": Param((d,), init="uniform", scale=0.5, axes=(None,)),
+        "mu_w": Param((d,), init="uniform", scale=0.5, axes=(None,)),
+        "wr": Param((d, d), init="scaled", axes=("embed", None)),
+        "wk": Param((d, d), init="scaled", axes=("embed", None)),
+        "wv": Param((d, d), init="scaled", axes=("embed", None)),
+        "wg": Param((d, d), init="scaled", axes=("embed", None)),
+        "wo": Param((d, d), init="scaled", axes=(None, "embed")),
+        "w0": Param((d,), init="uniform", scale=1.0, axes=(None,)),
+        "w_lora_a": Param((d, lora), init="scaled", axes=("embed", None)),
+        "w_lora_b": Param((lora, d), init="zeros", axes=(None, None)),
+        "u": Param((d,), init="uniform", scale=0.5, axes=(None,)),
+        "gn_scale": Param((d,), init="ones", axes=(None,)),
+        # channel-mix
+        "mu_ck": Param((d,), init="uniform", scale=0.5, axes=(None,)),
+        "ck": Param((d, cfg.d_ff), init="scaled", axes=("embed", "mlp")),
+        "cv": Param((cfg.d_ff, d), init="scaled", axes=("mlp", "embed")),
+    }
+
+
+def _shift(x, x_prev=None):
+    """x_{t-1} along seq; first position uses x_prev (or zeros)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _log_decay(params, xw):
+    raw = (params["w0"][None, None, :].astype(jnp.float32)
+           + jnp.tanh(xw.astype(jnp.float32)
+                      @ params["w_lora_a"].astype(jnp.float32))
+           @ params["w_lora_b"].astype(jnp.float32))
+    return -jnp.clip(jnp.exp(raw), 1e-6, CLAMP)  # (B, L, d) in [-CLAMP, 0)
+
+
+def wkv_chunked(r, k, v, lw, u, S0=None):
+    """r,k,v: (B, L, H, D); lw: (B, L, H, D) log-decay; u: (H, D).
+    Returns (out (B,L,H,D), S_last (B,H,D,D))."""
+    B, L, H, D = r.shape
+    c = min(CHUNK, L)
+    assert L % c == 0
+    nc = L // c
+    rs = r.reshape(B, nc, c, H, D)
+    ks = k.reshape(B, nc, c, H, D)
+    vs = v.reshape(B, nc, c, H, D)
+    lws = lw.reshape(B, nc, c, H, D)
+    cs = jnp.cumsum(lws, axis=2)                       # inclusive
+    cs_ex = cs - lws                                   # exclusive (c_{t-1})
+
+    # within chunk: att[t,j] = sum_d r_td k_jd exp(cs_ex_t - cs_j), j<t
+    r_in = rs * jnp.exp(cs_ex)                         # safe: <= |r|
+    k_in = ks * jnp.exp(-cs)                           # bounded by clamp*chunk
+    att = jnp.einsum("bzthd,bzjhd->bzhtj", r_in, k_in)
+    tri = jnp.tril(jnp.ones((c, c)), -1)               # strictly lower
+    att = att * tri[None, None, None]
+    diag = jnp.einsum("bzthd,hd,bzthd->bzth", rs, u, ks)  # u-bonus, j == t
+    y_in = (jnp.einsum("bzhtj,bzjhd->bzthd", att, vs)
+            + diag[..., None] * vs)
+
+    # chunk end state: S_z = diag(exp(cs_end)) S_{z-1} + sum_j exp(cs_end-cs_j) k_j v_j
+    dec_end = jnp.exp(cs[:, :, -1:, :, :] - cs)        # <= 1
+    kw = ks * dec_end
+    S_add = jnp.einsum("bzjhd,bzjhe->bzhde", kw, vs)   # (B,nc,H,D,D)
+    chunk_dec = jnp.exp(cs[:, :, -1])                  # (B,nc,H,D)
+
+    if S0 is None:
+        S0 = jnp.zeros((B, H, D, D), r.dtype)
+
+    def step(S, inp):
+        S_a, dec = inp
+        return S * dec[..., None] + S_a, S             # emit state BEFORE chunk
+
+    S_last, S_prev = lax.scan(
+        step, S0, (jnp.moveaxis(S_add, 1, 0), jnp.moveaxis(chunk_dec, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                # (B,nc,H,D,D)
+
+    # cross-chunk: y_t += (r_t * exp(cs_ex_t)) · S_prev
+    y_cross = jnp.einsum("bzthd,bzhde->bzthe", r_in, S_prev)
+    return (y_in + y_cross).reshape(B, L, H, D), S_last
+
+
+def apply_rwkv_timemix(params, x, cfg, state=None):
+    """x: (B, L, d). state: None (train) or dict(x_prev, S) for streaming."""
+    B, L, d = x.shape
+    nh = d // HEAD
+    x_prev = None if state is None else state["x_prev_t"]
+    xs = _shift(x, x_prev)
+    xr = _mix(x, xs, params["mu_r"].astype(x.dtype))
+    xk = _mix(x, xs, params["mu_k"].astype(x.dtype))
+    xv = _mix(x, xs, params["mu_v"].astype(x.dtype))
+    xg = _mix(x, xs, params["mu_g"].astype(x.dtype))
+    xw = _mix(x, xs, params["mu_w"].astype(x.dtype))
+
+    r = (xr @ params["wr"].astype(x.dtype)).reshape(B, L, nh, HEAD)
+    k = (xk @ params["wk"].astype(x.dtype)).reshape(B, L, nh, HEAD)
+    v = (xv @ params["wv"].astype(x.dtype)).reshape(B, L, nh, HEAD)
+    g = jax.nn.silu(xg @ params["wg"].astype(x.dtype))
+    lw = _log_decay(params, xw).reshape(B, L, nh, HEAD)
+    u = params["u"].astype(jnp.float32).reshape(nh, HEAD)
+
+    S0 = None if state is None else state["S"]
+    y, S_last = wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), lw, u, S0)
+    # per-head group norm
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu) * lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, L, d) * params["gn_scale"][None, None, :]
+    y = y.astype(x.dtype) * g
+    out = y @ params["wo"].astype(x.dtype)
+    new_state = {"x_prev_t": x[:, -1:], "S": S_last}
+    return out, new_state
+
+
+def apply_rwkv_channelmix(params, x, cfg, state=None):
+    x_prev = None if state is None else state["x_prev_c"]
+    xs = _shift(x, x_prev)
+    xk = _mix(x, xs, params["mu_ck"].astype(x.dtype))
+    h = jnp.square(jax.nn.relu(patterns.project_up(xk, params["ck"])))
+    out = patterns.project_down(h, params["cv"])
+    return out, {"x_prev_c": x[:, -1:]}
+
+
+def apply_rwkv_block(params, x, cfg, state=None):
+    t_in = apply_norm(params["ln_t"], x, "layernorm")
+    y, st_t = apply_rwkv_timemix(params, t_in, cfg, state)
+    x = x + y
+    c_in = apply_norm(params["ln_c"], x, "layernorm")
+    y, st_c = apply_rwkv_channelmix(params, c_in, cfg, state)
+    x = x + y
+    return x, {**st_t, **st_c}
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    nh = d // HEAD
+    return {"x_prev_t": jnp.zeros((batch, 1, d), dtype),
+            "x_prev_c": jnp.zeros((batch, 1, d), dtype),
+            "S": jnp.zeros((batch, nh, HEAD, HEAD), jnp.float32)}

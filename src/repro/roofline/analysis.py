@@ -1,0 +1,237 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = Σ per-collective (wire bytes per chip) / link_bw
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes
+are NOT in cost_analysis: we parse the optimized HLO text and sum operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, converting each op's *operand* size into wire
+bytes per chip with the standard ring factors over its replica-group
+size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+
+from repro.roofline.hw import V5E, Chip
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# matches e.g. "bf16[256,4096,512]{...}" or "f32[128]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_ALT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _line_operand_bytes(line: str) -> int:
+    """Sum the sizes of the result shapes on this HLO line (operand size
+    ~= result size for AG/AR/CP at the per-chip level; see factors below).
+    For tuples, sums the components."""
+    # result type appears right after '=' ; find all shapes before the op name
+    lhs = line.split("=", 1)
+    if len(lhs) < 2:
+        return 0
+    # the result type annotation is at the start of rhs
+    rhs = lhs[1].strip()
+    # collect leading shape tokens, e.g. "(bf16[..], bf16[..])" or "bf16[..]"
+    m = re.match(r"\(([^)]*)\)", rhs)
+    if m:
+        return sum(_shape_bytes(p) for p in m.group(1).split(","))
+    m = _SHAPE_RE.match(rhs)
+    return _shape_bytes(m.group(0)) if m else 0
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ALT_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    wire_bytes_per_chip: float
+    detail: list
+
+
+def collective_bytes(hlo_text: str, default_group: int = 1
+                     ) -> CollectiveStats:
+    """Per-chip ICI wire bytes from the optimized HLO.
+
+    Ring factors per op (result size R, group size G):
+      all-gather:        result R gathered; each chip sends/recvs
+                         R·(G-1)/G  (its output minus its own shard)
+      reduce-scatter:    operand R reduced+scattered: R·(G-1)/G
+      all-reduce:        RS + AG: 2·R·(G-1)/G
+      all-to-all:        R·(G-1)/G
+      collective-permute: R (point to point)
+    """
+    counts: dict[str, int] = {}
+    detail = []
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        if "-done(" in line:     # async pair: count only the start
+            continue
+        size = _line_operand_bytes(line)
+        g = _group_size(line, default_group)
+        if op == "all-reduce":
+            wire = 2.0 * size * (g - 1) / max(g, 1)
+        elif op == "collective-permute":
+            wire = float(size)
+        else:
+            wire = float(size) * (g - 1) / max(g, 1)
+        counts[op] = counts.get(op, 0) + 1
+        total += wire
+        detail.append({"op": op, "bytes": size, "group": g, "wire": wire})
+    return CollectiveStats(counts, total, detail)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    wire_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    collective_counts: dict
+    per_device_hbm_peak: float | None = None
+    memory_s_analytic: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips) — cost_analysis is per-chip
+        under SPMD (calibrated). Remat/redundancy waste detector."""
+        tot = self.hlo_flops * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / modeled step time (MFU-against-bound)."""
+        t_useful = self.model_flops / (self.chips * V5E.peak_bf16_flops)
+        return t_useful / self.bound_s if self.bound_s else 0.0
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, useful_fraction=self.useful_fraction,
+                 roofline_fraction=self.roofline_fraction,
+                 bound_s=self.bound_s)
+        return d
+
+
+def analyze(arch: str, shape_name: str, mesh_desc: str, chips: int,
+            cost: dict, hlo_text: str, model_flops: float,
+            hbm_peak: float | None = None, chip: Chip = V5E) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    # cost_analysis 'bytes accessed' counts all operand+output traffic
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    # cost_analysis is per-program = per-chip under SPMD.
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_desc, chips=chips,
+        hlo_flops=flops, hlo_bytes=hbm_bytes,
+        wire_bytes_per_chip=coll.wire_bytes_per_chip,
+        compute_s=flops / chip.peak_bf16_flops,
+        memory_s=hbm_bytes / chip.hbm_bw,
+        collective_s=coll.wire_bytes_per_chip / chip.ici_link_bw,
+        model_flops=model_flops,
+        collective_counts=coll.counts,
+        per_device_hbm_peak=hbm_peak,
+    )
+
+
+def analytic_memory_bytes(cfg, shape, chips: int) -> float:
+    """Napkin per-chip HBM traffic per step — cross-check for the
+    CPU-XLA ``bytes accessed`` term (which over-counts unfused
+    elementwise chains; TPU fuses them).
+
+    train:   weights fwd+bwd (2 × 2N/chips bytes bf16) + optimizer state
+             rw (16N/chips fp32 m,v + master) + activation save/restore
+             with per-layer remat (~8 passes over L·tokens·d per chip).
+    prefill: weights read + activations (~4 passes).
+    decode:  weights read + full KV cache read + state rw.
+    """
+    N = cfg.n_params()
+    Na = cfg.n_active_params()
+    d = cfg.d_model
+    L = cfg.n_layers
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len / chips
+        w = 2 * 2 * N / chips + 16 * N / chips
+        acts = 8.0 * L * toks * d * 2
+        return w + acts
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len / chips
+        return 2 * Na / chips + 4.0 * L * toks * d * 2
+    # decode: batch sharded over dp, cache seq over model
+    cache = (2 * shape.global_batch * min(shape.seq_len,
+                                          cfg.sliding_window or 1 << 62)
+             * cfg.n_kv_heads * cfg.hd * 2) if not cfg.is_attention_free else 0
+    if cfg.block in ("rwkv", "mamba_hybrid"):
+        state = shape.global_batch * d * 64 * 4 * L  # ssm/wkv state rw
+        cache = cache // (1 if cfg.block == "rwkv" else 6) + state
+    return 2 * Na / chips + cache / chips
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D convention (N = active params, D = tokens processed)."""
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * cfg.n_active_params() * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * cfg.n_active_params() * toks
+    # decode: one token per sequence
+    return 2.0 * cfg.n_active_params() * shape.global_batch

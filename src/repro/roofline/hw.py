@@ -1,0 +1,18 @@
+"""Target hardware constants (TPU v5e) for the roofline model."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12      # per chip
+    hbm_bw: float = 819e9                # bytes/s
+    ici_link_bw: float = 50e9            # bytes/s per link direction
+    ici_links: int = 4                   # 2D torus: 4 links per chip
+    hbm_bytes: int = 16 * 2**30
+    vmem_bytes: int = 128 * 2**20
+
+
+V5E = Chip()

@@ -1,0 +1,47 @@
+"""Serving-side KV cache management.
+
+The model-level cache layout (strided sequence sharding) lives in
+repro.models.attention/transformer; this module adds the serving
+concerns: slot allocation for continuous batching, per-sequence lengths,
+and prefill-into-cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class CachePool:
+    """Fixed-capacity batch of cache slots for continuous batching."""
+    cfg: object
+    batch: int
+    max_len: int
+
+    def __post_init__(self):
+        self.caches = transformer.init_caches(self.cfg, self.batch,
+                                              self.max_len, self.cfg.dtype)
+        self.lengths = np.zeros(self.batch, np.int32)
+        self.active = np.zeros(self.batch, bool)
+
+    def alloc(self) -> int | None:
+        free = np.nonzero(~self.active)[0]
+        if len(free) == 0:
+            return None
+        slot = int(free[0])
+        self.active[slot] = True
+        self.lengths[slot] = 0
+        return slot
+
+    def free(self, slot: int):
+        self.active[slot] = False
+        self.lengths[slot] = 0
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())

@@ -1,0 +1,18 @@
+"""Token samplers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits):
+    """logits: (B, 1, V) -> (B, 1) int32."""
+    return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+
+def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
+    lf = logits[:, -1].astype(jnp.float32) / max(temp, 1e-4)
+    if top_k:
+        kth = jnp.sort(lf, axis=-1)[:, -top_k][:, None]
+        lf = jnp.where(lf < kth, -jnp.inf, lf)
+    return jax.random.categorical(key, lf, axis=-1)[:, None].astype(jnp.int32)

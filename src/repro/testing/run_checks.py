@@ -1,0 +1,50 @@
+"""Entry point for the multi-device check battery (see distributed_checks).
+
+Must be launched with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+Each check runs in its OWN subprocess: jit-cache state shared across
+differing meshes in one process can trip an XLA CHECK crash
+("Invalid binary instruction opcode copy"), and process isolation also
+means one crash can't take down the whole battery.
+
+Prints one JSON object mapping check name -> {ok, error}.
+"""
+import json
+import os
+import subprocess
+import sys
+import traceback
+
+
+def run_one(name: str) -> dict:
+    code = (f"import sys; sys.path.insert(0, {os.getcwd()!r} + '/src'); "
+            f"from repro.testing import distributed_checks as dc; "
+            f"dc.{name}()")
+    env = dict(os.environ)
+    env.setdefault("XLA_FLAGS",
+                   "--xla_force_host_platform_device_count=8")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode == 0:
+        return {"ok": True}
+    return {"ok": False,
+            "error": (proc.stderr[-3000:] or
+                      f"exit code {proc.returncode}")}
+
+
+def main():
+    from repro.testing import distributed_checks as dc
+    results = {}
+    for fn in dc.ALL_CHECKS:
+        name = fn.__name__
+        try:
+            results[name] = run_one(name)
+        except Exception:
+            results[name] = {"ok": False,
+                             "error": traceback.format_exc()[-3000:]}
+        print(f"# {name}: {'OK' if results[name]['ok'] else 'FAIL'}",
+              flush=True)
+    print(json.dumps(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS device-count override here (dry-run hygiene: smoke
+# tests and benches see 1 device). Multi-device coverage runs via the
+# subprocess battery in test_distributed.py.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

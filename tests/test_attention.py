@@ -1,0 +1,100 @@
+"""Attention: blockwise (flash-style) vs dense oracle; masks; decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flash_decode as fd
+from repro.models import attention
+
+
+def _qkv(key, B, S, H, D):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    return tuple(jax.random.normal(k, (B, S, H, D)) for k in ks)
+
+
+@pytest.mark.parametrize("mask", ["causal", "window", "prefix", "bidir"])
+@pytest.mark.parametrize("cq,ck", [(16, 16), (32, 64), (64, 32)])
+def test_blockwise_matches_dense(mask, cq, ck):
+    B, S, H, D = 2, 128, 4, 16
+    q, k, v = _qkv(0, B, S, H, D)
+    kw = dict(causal=mask != "bidir",
+              window=24 if mask == "window" else None,
+              prefix_len=10 if mask == "prefix" else None,
+              scale=D ** -0.5)
+    want = attention.dense_attention(q, k, v, **kw)
+    got = attention.blockwise_attention(q, k, v, chunk_q=cq, chunk_kv=ck,
+                                        **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_blockwise_odd_seq_vlm():
+    """Non-power-of-two sequence (vlm prefix) picks divisor chunks."""
+    B, S, H, D = 1, 136, 2, 8   # 136 = 8*17
+    q, k, v = _qkv(1, B, S, H, D)
+    want = attention.dense_attention(q, k, v, scale=0.35, causal=True,
+                                     prefix_len=8)
+    got = attention.blockwise_attention(q, k, v, scale=0.35, causal=True,
+                                        prefix_len=8, chunk_q=32, chunk_kv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_decode_reference_matches_dense_last_token():
+    """Flash-decode oracle == causal dense attention's last row."""
+    B, S, H, KVH, D = 2, 32, 8, 4, 16
+    q1 = jax.random.normal(jax.random.PRNGKey(0), (B, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KVH, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KVH, D))
+    cur = 20
+    out = fd.reference_decode_attention(q1, k, v, cur, D ** -0.5)
+    # dense: repeat kv, take row cur-1 with q placed there
+    rep = H // KVH
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    qfull = jnp.zeros((B, S, H, D)).at[:, cur - 1].set(q1)
+    dense = attention.dense_attention(qfull, kr, vr, scale=D ** -0.5,
+                                      causal=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(dense[:, cur - 1]),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_partial_combine_invariance():
+    """Splitting the KV set into shards and combining partials must equal
+    the unsharded softmax (the paper's core correctness property)."""
+    B, H, D, S = 2, 4, 8, 48
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    valid = jnp.ones((B, S), bool)
+    whole = fd.finalize(fd.local_partial_attention(q, k, v, valid, 0.3))
+    for n_shards in (2, 3, 4):
+        assert S % n_shards == 0
+        parts = []
+        for s in range(n_shards):
+            sl = slice(s * S // n_shards, (s + 1) * S // n_shards)
+            parts.append(fd.local_partial_attention(
+                q, k[:, sl], v[:, sl], valid[:, sl], 0.3))
+        acc = parts[0]
+        for p in parts[1:]:
+            acc = fd.combine2(acc, p)
+        np.testing.assert_allclose(np.asarray(fd.finalize(acc)),
+                                   np.asarray(whole), rtol=2e-5, atol=2e-6)
+
+
+def test_combine_handles_empty_shard():
+    """A rank whose KV shard is entirely beyond cur_len contributes
+    nothing (m = -inf partial)."""
+    B, H, D, S = 1, 2, 8, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    full = fd.local_partial_attention(q, k, v, jnp.ones((B, S), bool), 0.3)
+    empty = fd.local_partial_attention(q, k, v, jnp.zeros((B, S), bool), 0.3)
+    both = fd.combine2(full, empty)
+    np.testing.assert_allclose(np.asarray(fd.finalize(both)),
+                               np.asarray(fd.finalize(full)),
+                               rtol=1e-6, atol=1e-7)
+    assert np.isfinite(np.asarray(fd.finalize(both))).all()

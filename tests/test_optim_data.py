@@ -1,0 +1,81 @@
+"""Optimizer, schedules, data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import ByteCorpus, SyntheticLM
+from repro.optim import adamw, schedule
+
+
+def test_adamw_optimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw.init_state(params)
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = adamw.apply_updates(params, g, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    state = adamw.init_state(params)
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    g = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = adamw.apply_updates(params, g, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5   # raw norm reported
+
+
+def test_no_decay_names():
+    params = {"norm": {"scale": jnp.ones((4,))},
+              "dense": {"kernel": jnp.ones((4, 4))}}
+    state = adamw.init_state(params)
+    cfg = adamw.AdamWConfig(lr=0.0, weight_decay=0.5)  # lr 0: only decay path
+    g = jax.tree.map(jnp.zeros_like, params)
+    new, _, _ = adamw.apply_updates(params, g, state, cfg)
+    # with lr=0 nothing changes at all; use lr>0 to see decay on kernel only
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.5)
+    new, _, _ = adamw.apply_updates(params, g, state, cfg)
+    np.testing.assert_array_equal(np.asarray(new["norm"]["scale"]),
+                                  np.ones((4,)))     # no decay on 'scale'
+    assert (np.asarray(new["dense"]["kernel"]) < 1.0).all()   # decayed
+
+
+def test_warmup_cosine_shape():
+    f = schedule.warmup_cosine(1.0, 10, 100)
+    assert float(f(jnp.int32(0))) == 0.0
+    assert abs(float(f(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(f(jnp.int32(100))) <= float(f(jnp.int32(50)))
+    assert float(f(jnp.int32(100))) >= 0.099  # floor
+
+
+def test_synthetic_data_deterministic_and_seekable():
+    d1 = SyntheticLM(vocab_size=128, seq_len=16, global_batch=4, seed=7)
+    d2 = SyntheticLM(vocab_size=128, seq_len=16, global_batch=4, seed=7)
+    b1, b2 = d1.batch_at(42), d2.batch_at(42)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 16)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(d1.batch_at(0)["labels"][:, :-1],
+                                  d1.batch_at(0)["tokens"][:, 1:])
+
+
+def test_host_sharding_differs():
+    a = SyntheticLM(vocab_size=128, seq_len=8, global_batch=8, seed=0,
+                    host_id=0, n_hosts=2)
+    b = SyntheticLM(vocab_size=128, seq_len=8, global_batch=8, seed=0,
+                    host_id=1, n_hosts=2)
+    assert a.host_batch == 4
+    assert not np.array_equal(a.batch_at(0)["tokens"],
+                              b.batch_at(0)["tokens"])
+
+
+def test_byte_corpus(tmp_path):
+    p = tmp_path / "corpus.txt"
+    p.write_bytes(b"hello world, this is a tiny corpus for testing." * 10)
+    d = ByteCorpus(str(p), seq_len=16, global_batch=2, seed=1)
+    b = d.batch_at(0)
+    assert b["tokens"].shape == (2, 16)
+    assert (b["tokens"] < 256).all()
+    np.testing.assert_array_equal(d.batch_at(3)["tokens"],
+                                  d.batch_at(3)["tokens"])

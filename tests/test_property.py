@@ -1,0 +1,124 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flash_decode as fd
+from repro.core import taxes
+from repro.distributed import grad_compress as gc
+from repro.roofline import analysis
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+floats = st.floats(-50, 50, allow_nan=False, width=32)
+
+
+def _partial(draw_vals, B=1, H=2, D=4):
+    o = jnp.asarray(draw_vals[: B * H * D], jnp.float32).reshape(B, H, D)
+    m = jnp.asarray(draw_vals[B * H * D: B * H * D + B * H],
+                    jnp.float32).reshape(B, H)
+    l = jnp.abs(jnp.asarray(draw_vals[-B * H:], jnp.float32)
+                ).reshape(B, H) + 1e-3
+    return (o, m, l)
+
+
+@given(st.lists(floats, min_size=24, max_size=24),
+       st.lists(floats, min_size=24, max_size=24),
+       st.lists(floats, min_size=24, max_size=24))
+def test_combine2_associative(a, b, c):
+    """Online-softmax combine is associative — the property that makes
+    ring / reduce-scatter / arbitrary-arrival-order combines all agree
+    (the paper's fine-grained dataflow relies on this)."""
+    pa, pb, pc = _partial(a), _partial(b), _partial(c)
+    left = fd.finalize(fd.combine2(fd.combine2(pa, pb), pc))
+    right = fd.finalize(fd.combine2(pa, fd.combine2(pb, pc)))
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.lists(floats, min_size=24, max_size=24),
+       st.lists(floats, min_size=24, max_size=24))
+def test_combine2_commutative(a, b):
+    pa, pb = _partial(a), _partial(b)
+    ab = fd.finalize(fd.combine2(pa, pb))
+    ba = fd.finalize(fd.combine2(pb, pa))
+    np.testing.assert_allclose(np.asarray(ab), np.asarray(ba),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 64), st.integers(1, 16))
+def test_strided_layout_bijection(S_loc, W):
+    """The strided KV layout (pos p -> rank p%W slot p//W) is a bijection
+    onto (rank, slot) — no two positions collide."""
+    S = S_loc * W
+    pos = np.arange(S)
+    rank, slot = pos % W, pos // W
+    seen = set(zip(rank.tolist(), slot.tolist()))
+    assert len(seen) == S
+    assert (slot < S_loc).all()
+
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                min_size=8, max_size=300))
+def test_int8_compress_error_bound(vals):
+    """Per-block int8 quantization error <= scale/2 = absmax/254."""
+    g = jnp.asarray(vals, jnp.float32)
+    q, s = gc.compress_int8(g, block=64)
+    back = gc.decompress_int8(q, s, g.shape)
+    err = np.abs(np.asarray(back - g))
+    # bound per block: absmax/127/2 (round-to-nearest)
+    blocks = np.asarray(jnp.pad(g, (0, (-len(vals)) % 64)).reshape(-1, 64))
+    bound = np.abs(blocks).max(1) / 127.0 * 0.5 + 1e-6
+    err_blocks = np.pad(err, (0, (-len(vals)) % 64)).reshape(-1, 64)
+    assert (err_blocks <= bound[:, None] + 1e-7).all()
+
+
+@given(st.integers(2, 32))
+def test_ring_schedule_covers_all_shards(W):
+    """In the ring schedule, device i at step t holds shard (i-t) mod W;
+    over W steps every device sees every shard exactly once."""
+    for i in range(W):
+        seen = {(i - t) % W for t in range(W)}
+        assert seen == set(range(W))
+
+
+@given(st.floats(1e3, 1e15), st.floats(1e3, 1e12), st.floats(1e3, 1e12))
+def test_ring_never_worse_than_bsp_in_model(flops, hbm, wire):
+    """The tax model must always score the fine-grained schedule <= BSP
+    (it removes taxes, never adds)."""
+    op = taxes.OpShape(flops=flops, hbm_bytes=hbm, wire_bytes=wire,
+                       intermediate_bytes=hbm / 3, steps=8)
+    assert (taxes.ring_schedule(op).total_s
+            <= taxes.bsp_schedule(op).total_s + 1e-12)
+
+
+@given(st.integers(1, 512))
+def test_elastic_mesh_plan_uses_all_chips(n_chips):
+    from repro.distributed.fault_tolerance import plan_elastic_remesh
+    shape = plan_elastic_remesh(n_chips)
+    prod = 1
+    for s in shape:
+        prod *= s
+    assert prod <= n_chips
+    assert prod >= n_chips // 2  # never waste more than half
+
+
+def test_collective_parser_factors():
+    """HLO collective-bytes parser applies the documented ring factors."""
+    hlo = """
+  %ag = bf16[1024,1024]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={1}
+  %ar = f32[4096]{0} all-reduce(%y), replica_groups=[1,256]<=[256], to_apply=%sum
+  %cp = bf16[512,128]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %rs = f32[256,64]{1,0} reduce-scatter(%w), replica_groups=[16,16]<=[256], dimensions={0}
+"""
+    stats = analysis.collective_bytes(hlo)
+    assert stats.counts == {"all-gather": 1, "all-reduce": 1,
+                            "collective-permute": 1, "reduce-scatter": 1}
+    ag = 1024 * 1024 * 2 * 15 / 16
+    ar = 4096 * 4 * 2 * 255 / 256
+    cp = 512 * 128 * 2
+    rs = 256 * 64 * 4 * 15 / 16
+    np.testing.assert_allclose(stats.wire_bytes_per_chip, ag + ar + cp + rs,
+                               rtol=1e-6)

@@ -1,0 +1,83 @@
+"""Roofline analysis unit tests (parser factors covered in test_property)."""
+import numpy as np
+
+from repro.configs import get_config, get_shape
+from repro.roofline import analysis
+from repro.roofline.hw import V5E
+
+
+def test_analyze_terms():
+    hlo = "%ag = bf16[1000,1000]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={1}\n"
+    cost = {"flops": 1e12, "bytes accessed": 1e11}
+    r = analysis.analyze("a", "s", "16dx16m", 256, cost, hlo, 6e9 * 1e6)
+    assert abs(r.compute_s - 1e12 / V5E.peak_bf16_flops) < 1e-12
+    assert abs(r.memory_s - 1e11 / V5E.hbm_bw) < 1e-12
+    wire = 2e6 * 15 / 16
+    assert abs(r.collective_s - wire / V5E.ici_link_bw) / r.collective_s < 1e-6
+    assert r.dominant in ("compute", "memory", "collective")
+    # useful fraction uses global flops (per-chip x chips)
+    assert abs(r.useful_fraction - 6e15 / (1e12 * 256)) < 1e-9
+
+
+def test_async_collectives_counted_once():
+    hlo = """
+  %ag-start = bf16[64,64]{1,0} all-gather-start(%x), replica_groups=[4,4]<=[16], dimensions={1}
+  %ag-done = bf16[64,64]{1,0} all-gather-done(%ag-start)
+"""
+    stats = analysis.collective_bytes(hlo)
+    assert stats.counts.get("all-gather", 0) == 1
+
+
+def test_model_flops_conventions():
+    cfg = get_config("llama3-8b")
+    tr = analysis.model_flops_for(cfg, get_shape("train_4k"))
+    pf = analysis.model_flops_for(cfg, get_shape("prefill_32k"))
+    dc = analysis.model_flops_for(cfg, get_shape("decode_32k"))
+    toks_tr = 256 * 4096
+    assert abs(tr - 6 * cfg.n_params() * toks_tr) / tr < 1e-9
+    assert pf == 2 * cfg.n_params() * 32 * 32768
+    assert dc == 2 * cfg.n_params() * 128
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("mixtral-8x22b")
+    tr = analysis.model_flops_for(cfg, get_shape("train_4k"))
+    assert tr == 6 * cfg.n_active_params() * 256 * 4096
+    assert cfg.n_active_params() < 0.4 * cfg.n_params()
+
+
+def test_analytic_memory_sane():
+    cfg = get_config("llama3-8b")
+    b = analysis.analytic_memory_bytes(cfg, get_shape("train_4k"), 256)
+    # must at least cover optimizer traffic: 16 bytes/param/chip
+    assert b > 16 * cfg.n_params() / 256
+    # decode: covers weights read
+    d = analysis.analytic_memory_bytes(cfg, get_shape("decode_32k"), 256)
+    assert d > 2 * cfg.n_params() / 256
+
+
+def test_experiment_store_complete():
+    """The committed dry-run store covers the full 40-cell grid on both
+    meshes with no errors (deliverable e)."""
+    import json
+    import os
+    base = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dryrun")
+    if not os.path.isdir(base):
+        import pytest
+        pytest.skip("experiment store not present")
+    from repro.configs.shapes import ARCH_IDS
+    from repro.configs import ALL_SHAPES
+    ok, skipped = 0, 0
+    for a in ARCH_IDS:
+        for s in ALL_SHAPES:
+            for suffix in ("single", "multi_scan"):
+                path = os.path.join(base, f"{a}__{s.name}__{suffix}.json")
+                assert os.path.exists(path), f"missing cell {path}"
+                with open(path) as f:
+                    rec = json.load(f)
+                assert rec["status"] in ("ok", "skipped"), (
+                    a, s.name, suffix, rec.get("error", "")[:100])
+                ok += rec["status"] == "ok"
+                skipped += rec["status"] == "skipped"
+    assert ok == 64 and skipped == 16  # 32 runnable cells x 2 meshes
