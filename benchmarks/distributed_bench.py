@@ -107,6 +107,34 @@ def bench_scaling():
               f"modeled_tpu_total_us={t_tpu * 1e6:.2f}")
 
 
+def bench_serving_engine():
+    """Continuous-batching engine under staggered traffic: lockstep
+    token-at-a-time prefill (chunk=1) vs chunked batched prefill.
+    Derived column: jitted dispatches to drain the same workload (idle
+    ticks excluded) — the quantity chunked prefill cuts."""
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm as lm_mod
+    from repro.serving.engine import Engine, Request
+
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=2)
+    params = lm_mod.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, cfg.vocab_size, rng.integers(4, 24)))
+               for _ in range(12)]
+    for chunk in (1, 8):
+        eng = Engine(params, cfg, batch=4, max_len=128,
+                     prefill_chunk=chunk)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=[int(t) for t in p],
+                               max_new_tokens=8), at_tick=i)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = (time.perf_counter() - t0) * 1e6
+        m = eng.metrics(done)
+        print(f"serve_staggered_chunk{chunk},{dt:.1f},"
+              f"dispatches={m['dispatches']};p50_ttft_s={m['p50_ttft_s']}")
+
+
 def bench_pallas_ag_gemm(W=4):
     """Fused in-kernel AG+GEMM (interpret mode: structural check only)."""
     mesh = jax.make_mesh((W,), ("model",))
@@ -127,5 +155,7 @@ if __name__ == "__main__":
         bench_flash_decode()
     if which in ("all", "scaling"):
         bench_scaling()
+    if which in ("all", "serving"):
+        bench_serving_engine()
     if which in ("all", "pallas"):
         bench_pallas_ag_gemm()

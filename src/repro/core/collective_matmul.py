@@ -38,6 +38,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import jax_compat
+
 
 def _ring_perms(axis: str, W: int):
     right = [(j, (j + 1) % W) for j in range(W)]
@@ -53,7 +55,7 @@ def ag_gemm_k_sharded(a, b_full, *, axis: str, mode: str = "ring"):
 
     a: (M, K/W) local shard, b_full: (K, N) replicated.
     """
-    W = lax.axis_size(axis)
+    W = jax_compat.axis_size(axis)
     i = lax.axis_index(axis)
     k = a.shape[-1]
     right, left = _ring_perms(axis, W)
@@ -104,7 +106,7 @@ def ag_gemm_m_sharded(a, b, *, axis: str, mode: str = "ring"):
 
     Returns (..., M, N/W): full rows, column shard.
     """
-    W = lax.axis_size(axis)
+    W = jax_compat.axis_size(axis)
     i = lax.axis_index(axis)
     right, left = _ring_perms(axis, W)
     mdim = a.ndim - 2
@@ -155,7 +157,7 @@ def gemm_rs(a, b, *, axis: str, mode: str = "ring"):
 
     a: (..., M, K/W), b: (K/W, N). Returns (..., M/W, N).
     """
-    W = lax.axis_size(axis)
+    W = jax_compat.axis_size(axis)
     i = lax.axis_index(axis)
     right, _ = _ring_perms(axis, W)
     mdim = a.ndim - 2
@@ -199,7 +201,7 @@ def gemm_rs(a, b, *, axis: str, mode: str = "ring"):
 # Standalone ring all-gather (paper §4.2.3 "Independent All-Gather Kernel").
 # --------------------------------------------------------------------------
 def all_gather_ring(x, *, axis: str, gather_axis: int = 0):
-    W = lax.axis_size(axis)
+    W = jax_compat.axis_size(axis)
     i = lax.axis_index(axis)
     right, _ = _ring_perms(axis, W)
     m = x.shape[gather_axis]
@@ -226,13 +228,31 @@ def _smap(fn, mesh, in_specs, out_specs, axis: str, check_vma=True):
     # outputs are *semantically* replicated but computed from per-device
     # shard orders (k-sharded ring, decode combine) opt out — VMA analysis
     # cannot prove their replication.
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, axis_names={axis},
-                         check_vma=check_vma)
+    return jax_compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs, axis_names={axis},
+                                check_vma=check_vma)
+
+
+def _check(cond: bool, msg: str):
+    if not cond:
+        raise ValueError(f"collective_matmul: {msg}")
 
 
 def ag_gemm_k_sharded_sm(a, b, mesh, *, axis="model", mode="ring"):
     """a: (..., M, K) K globally sharded on `axis`; b: (K, N) replicated."""
+    W = mesh.shape[axis]
+    K = a.shape[-1]
+    _check(K % W == 0,
+           f"ag_gemm_k_sharded: K={K} must divide by the '{axis}' axis "
+           f"size W={W} (A is K-sharded; a ragged shard would silently "
+           f"drop columns)")
+    _check(b.shape[0] == K,
+           f"ag_gemm_k_sharded: A K dim {K} != B K dim {b.shape[0]}")
+    _check(mode != "ring_bidir" or (K // W) % 2 == 0,
+           f"ag_gemm_k_sharded: ring_bidir splits the local K shard "
+           f"K/W={K // W} in half; it must be even — odd shards "
+           f"mis-slice B's row blocks and return silently WRONG results "
+           f"(measured max err ~5 on a unit test, not a rounding issue)")
     fn = functools.partial(ag_gemm_k_sharded, axis=axis, mode=mode)
     ins = (P(*(None,) * (a.ndim - 1), axis), P())
     return _smap(fn, mesh, ins, P(), axis, check_vma=False)(a, b)
@@ -240,6 +260,16 @@ def ag_gemm_k_sharded_sm(a, b, mesh, *, axis="model", mode="ring"):
 
 def ag_gemm_m_sharded_sm(a, b, mesh, *, axis="model", mode="ring"):
     """a: (..., M, K) M sharded; b: (K, N) N sharded -> (..., M, N) N-sharded."""
+    W = mesh.shape[axis]
+    M, K = a.shape[-2], a.shape[-1]
+    _check(M % W == 0,
+           f"ag_gemm_m_sharded: M={M} must divide by the '{axis}' axis "
+           f"size W={W} (A is M/row-sharded)")
+    _check(b.shape[0] == K,
+           f"ag_gemm_m_sharded: A K dim {K} != B K dim {b.shape[0]}")
+    _check(b.shape[-1] % W == 0,
+           f"ag_gemm_m_sharded: N={b.shape[-1]} must divide by W={W} "
+           f"(B is N/column-sharded)")
     fn = functools.partial(ag_gemm_m_sharded, axis=axis, mode=mode)
     ins = (P(*(None,) * (a.ndim - 2), axis, None), P(None, axis))
     outs = P(*(None,) * (a.ndim - 1), axis)
@@ -248,6 +278,14 @@ def ag_gemm_m_sharded_sm(a, b, mesh, *, axis="model", mode="ring"):
 
 def gemm_rs_sm(a, b, mesh, *, axis="model", mode="ring"):
     """a: (..., M, K) K sharded; b: (K, N) K sharded -> (..., M, N) M-sharded."""
+    W = mesh.shape[axis]
+    M, K = a.shape[-2], a.shape[-1]
+    _check(M % W == 0,
+           f"gemm_rs: M={M} must divide by the '{axis}' axis size W={W} "
+           f"— the ring reduce-scatter hands out M/W-row blocks and a "
+           f"ragged M would silently DROP the trailing {M % W} row(s)")
+    _check(K % W == 0,
+           f"gemm_rs: K={K} must divide by W={W} (A and B are K-sharded)")
     fn = functools.partial(gemm_rs, axis=axis, mode=mode)
     ins = (P(*(None,) * (a.ndim - 1), axis), P(axis, None))
     outs = P(*(None,) * (a.ndim - 2), axis, None)

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import jax_compat
+
 
 # ---------------------------------------------------------------- local part
 def local_partial_attention(q, k_shard, v_shard, valid, scale):
@@ -87,7 +89,7 @@ def finalize(partial):
 # --------------------------------------------------------- combine strategies
 def combine_bsp(partial, *, axis: str):
     """Paper baseline: blocking all-gather, then a separate combine pass."""
-    W = lax.axis_size(axis)
+    W = jax_compat.axis_size(axis)
     gathered = jax.tree.map(
         lambda x: lax.all_gather(x, axis, axis=0, tiled=False), partial)
     acc = jax.tree.map(lambda x: x[0], gathered)
@@ -98,7 +100,7 @@ def combine_bsp(partial, *, axis: str):
 
 def combine_ring(partial, *, axis: str):
     """Fine-grained: combine each arriving partial while the next flies."""
-    W = lax.axis_size(axis)
+    W = jax_compat.axis_size(axis)
     right = [(j, (j + 1) % W) for j in range(W)]
     cur = partial
     acc = partial
@@ -111,7 +113,7 @@ def combine_ring(partial, *, axis: str):
 def combine_rs_ag(partial, *, axis: str):
     """Beyond-paper: reduce-scatter over heads with the combine op, then
     all-gather. O(2·size) wire traffic vs O(W·size) for the ring pass."""
-    W = lax.axis_size(axis)
+    W = jax_compat.axis_size(axis)
     H = partial[0].shape[1]
     if H % W != 0:
         return combine_ring(partial, axis=axis)
@@ -148,7 +150,7 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, axis: str,
     cur_len: scalar int32 — tokens (including current) in the cache.
     Returns (B, H, D) attention output, replicated.
     """
-    W = lax.axis_size(axis)
+    W = jax_compat.axis_size(axis)
     i = lax.axis_index(axis)
     S_loc = k_cache.shape[1]
     gpos = jnp.arange(S_loc, dtype=jnp.int32) * W + i      # global positions
@@ -179,8 +181,8 @@ def decode_attention_sm(q, k_cache, v_cache, cur_len, mesh, *, axis="model",
     fn = functools.partial(decode_attention, axis=axis, scale=scale,
                            mode=mode, window=window)
     ins = (P(), P(None, axis, None, None), P(None, axis, None, None), P())
-    return jax.shard_map(fn, mesh=mesh, in_specs=ins, out_specs=P(),
-                         axis_names={axis}, check_vma=False)(
+    return jax_compat.shard_map(fn, mesh=mesh, in_specs=ins, out_specs=P(),
+                                axis_names={axis}, check_vma=False)(
         q, k_cache, v_cache, cur_len)
 
 
@@ -188,7 +190,8 @@ def decode_attention_sm(q, k_cache, v_cache, cur_len, mesh, *, axis="model",
 def decode_attention_fused(q, k_new, v_new, k_cache, v_cache, cur_len, *,
                            axis: str, scale: float, mode: str = "ring",
                            window: int | None = None,
-                           rolling_len: int | None = None):
+                           rolling_len: int | None = None,
+                           active=None):
     """One shard_map region does cache-update + partial attention + combine.
 
     The strided layout makes position ownership local: rank (p mod W) owns
@@ -199,15 +202,21 @@ def decode_attention_fused(q, k_new, v_new, k_cache, v_cache, cur_len, *,
     global data movement with fine-grained, ownership-aware dataflow.
 
     q: (B, H, D) replicated; k_new/v_new: (B, KVH, D); k_cache/v_cache:
-    (B, S_loc, KVH, D) local shard. Returns (out, k_cache, v_cache).
+    (B, S_loc, KVH, D) local shard. ``active`` (B,) bool (per-slot
+    ``cur_len`` only): slots not consuming a token this step skip the
+    cache write — their ``cur_len`` entry is the unchanged old length,
+    so the ownership predicate must not fire for them.
+    Returns (out, k_cache, v_cache).
     """
-    W = lax.axis_size(axis)
+    W = jax_compat.axis_size(axis)
     i = lax.axis_index(axis)
     S_loc = k_cache.shape[1]
     cl = jnp.asarray(cur_len)
     p = (cl - 1) % rolling_len if rolling_len is not None else cl - 1
     own = (p % W) == i
-    slot = jnp.minimum(p // W, S_loc - 1)
+    if active is not None:
+        own = own & jnp.asarray(active)
+    slot = jnp.minimum(jnp.maximum(p, 0) // W, S_loc - 1)
 
     def upd(cache, new):
         if cl.ndim:      # per-slot positions
@@ -233,15 +242,25 @@ def decode_attention_fused(q, k_new, v_new, k_cache, v_cache, cur_len, *,
 def decode_attention_fused_sm(q, k_new, v_new, k_cache, v_cache, cur_len,
                               mesh, *, axis="model", scale: float,
                               mode: str = "ring", window: int | None = None,
-                              rolling_len: int | None = None):
-    fn = functools.partial(decode_attention_fused, axis=axis, scale=scale,
-                           mode=mode, window=window, rolling_len=rolling_len)
+                              rolling_len: int | None = None,
+                              active=None):
     cache_spec = P(None, axis, None, None)
-    ins = (P(), P(), P(), cache_spec, cache_spec, P())
+
+    def fn(q, k_new, v_new, k_cache, v_cache, cur_len, *act):
+        return decode_attention_fused(
+            q, k_new, v_new, k_cache, v_cache, cur_len, axis=axis,
+            scale=scale, mode=mode, window=window,
+            rolling_len=rolling_len, active=act[0] if act else None)
+
+    args = [q, k_new, v_new, k_cache, v_cache, cur_len]
+    ins = [P(), P(), P(), cache_spec, cache_spec, P()]
+    if active is not None:           # replicated (B,) active mask
+        args.append(active)
+        ins.append(P())
     outs = (P(), cache_spec, cache_spec)
-    return jax.shard_map(fn, mesh=mesh, in_specs=ins, out_specs=outs,
-                         axis_names={axis}, check_vma=False)(
-        q, k_new, v_new, k_cache, v_cache, cur_len)
+    return jax_compat.shard_map(fn, mesh=mesh, in_specs=tuple(ins),
+                                out_specs=outs, axis_names={axis},
+                                check_vma=False)(*args)
 
 
 # ------------------------------------------------------- reference (1 device)

@@ -106,15 +106,18 @@ def decode_attn(q, k_cache, v_cache, cur_len, *, scale,
 
 def decode_attn_fused(q, k_new, v_new, k_cache, v_cache, cur_len, *, scale,
                       window: int | None = None,
-                      rolling_len: int | None = None):
+                      rolling_len: int | None = None,
+                      active=None):
     """Beyond-paper: cache-update + partial attention + combine in ONE
     shard_map region (see core.flash_decode.decode_attention_fused).
-    Returns (out, k_cache, v_cache). Used for fusion_mode ring/pallas;
-    'auto'/'bsp' keep the XLA-scatter baseline for comparison."""
+    ``active`` (B,) bool gates the per-slot cache write (continuous
+    batching / chunked prefill). Returns (out, k_cache, v_cache). Used
+    for fusion_mode ring/pallas; 'auto'/'bsp' keep the XLA-scatter
+    baseline for comparison."""
     ctx = dctx.current()
     mode = _mode(ctx)
     combine = {"ring": "ring", "pallas": "ring", "rs_ag": "rs_ag",
                "auto": "rs_ag", "bsp": "bsp"}[mode]
     return fd.decode_attention_fused_sm(
         q, k_new, v_new, k_cache, v_cache, cur_len, ctx.mesh, scale=scale,
-        mode=combine, window=window, rolling_len=rolling_len)
+        mode=combine, window=window, rolling_len=rolling_len, active=active)

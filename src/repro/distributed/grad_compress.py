@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import jax_compat
+
 
 def compress_bf16(g):
     return g.astype(jnp.bfloat16)
@@ -53,7 +55,7 @@ def compressed_psum_tree(grads, axis: str, scheme: str = "bf16",
     Call inside shard_map (manual over `axis`). Returns (mean_grads,
     new_residual). With error feedback: residual carries e = g - Q(g).
     """
-    n = jax.lax.axis_size(axis)
+    n = jax_compat.axis_size(axis)
 
     def one(g, r):
         g32 = g.astype(jnp.float32)

@@ -35,28 +35,35 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import jax_compat
+
 
 def _ag_gemm_kernel(a_ref, b_ref, o_ref, a_bufs, b_buf, acc_ref,
                     local_sem, send_sem, recv_sem, fetch_sem,
-                    *, axis: str, W: int, nn: int, bn: int):
+                    *, axis: str, W: int, nn: int, bn: int,
+                    use_barrier: bool = True):
     i = lax.axis_index(axis)
     n = pl.program_id(0)          # N tile (major)
     t = pl.program_id(1)          # ring step (minor)
     k = a_ref.shape[-1]
     s = lax.rem(i - t + W, W)     # shard id handled at this ring step
 
-    @pl.when((n == 0) & (t == 0) & (W > 1))
-    def _barrier():
-        # Neighbourhood barrier: nobody pushes into our inbox before we
-        # are inside the kernel (the symmetric-heap readiness handshake).
-        barrier = pltpu.get_barrier_semaphore()
-        right = lax.rem(i + 1, W)
-        left = lax.rem(i - 1 + W, W)
-        pltpu.semaphore_signal(barrier, inc=1, device_id=(right,),
-                               device_id_type=pltpu.DeviceIdType.MESH)
-        pltpu.semaphore_signal(barrier, inc=1, device_id=(left,),
-                               device_id_type=pltpu.DeviceIdType.MESH)
-        pltpu.semaphore_wait(barrier, 2)
+    if use_barrier:
+        @pl.when((n == 0) & (t == 0) & (W > 1))
+        def _barrier():
+            # Neighbourhood barrier: nobody pushes into our inbox before
+            # we are inside the kernel (symmetric-heap readiness
+            # handshake).
+            barrier = pltpu.get_barrier_semaphore()
+            right = lax.rem(i + 1, W)
+            left = lax.rem(i - 1 + W, W)
+            pltpu.semaphore_signal(
+                barrier, inc=1, device_id=jax_compat.pallas_device_id(right),
+                device_id_type=pltpu.DeviceIdType.MESH)
+            pltpu.semaphore_signal(
+                barrier, inc=1, device_id=jax_compat.pallas_device_id(left),
+                device_id_type=pltpu.DeviceIdType.MESH)
+            pltpu.semaphore_wait(barrier, 2)
 
     @pl.when((n == 0) & (t == 0))
     def _load_own():
@@ -69,7 +76,7 @@ def _ag_gemm_kernel(a_ref, b_ref, o_ref, a_bufs, b_buf, acc_ref,
         src_ref=a_bufs.at[s],
         dst_ref=a_bufs.at[s],
         send_sem=send_sem, recv_sem=recv_sem,
-        device_id=(lax.rem(i + 1, W),),
+        device_id=jax_compat.pallas_device_id(lax.rem(i + 1, W)),
         device_id_type=pltpu.DeviceIdType.MESH,
     )
 
@@ -113,16 +120,32 @@ def ag_gemm_fused(a_shard, b_full, *, axis: str, bn: int = 256,
     """
     M, k = a_shard.shape
     K, N = b_full.shape
-    assert K % k == 0
+    if K % k != 0:
+        raise ValueError(
+            f"ag_gemm_fused: B rows K={K} must be a multiple of the "
+            f"local A shard width k={k}")
     W = K // k
+    # clamp bn to the largest divisor of N <= bn (the N grid must tile
+    # exactly; a plain min() used to crash an assert for non-multiple N)
     bn = min(bn, N)
-    assert N % bn == 0
+    while N % bn:
+        bn -= 1
+    if N >= 16 and bn < 16:
+        # no usable divisor (e.g. prime N): a handful-of-lanes tile grid
+        # is vector-misaligned and orders of magnitude slow on the MXU —
+        # refuse loudly rather than silently degrade to bn=1
+        raise ValueError(
+            f"ag_gemm_fused: N={N} has no divisor >= 16 to tile the "
+            f"output columns (largest <= bn is {bn}); pad N to a "
+            f"128-multiple or use the XLA ring fallback")
     nn = N // bn
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
 
     return pl.pallas_call(
-        functools.partial(_ag_gemm_kernel, axis=axis, W=W, nn=nn, bn=bn),
+        functools.partial(
+            _ag_gemm_kernel, axis=axis, W=W, nn=nn, bn=bn,
+            use_barrier=jax_compat.pallas_barrier_supported(interpret)),
         grid=(nn, W),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),   # a_shard (HBM)
@@ -139,9 +162,8 @@ def ag_gemm_fused(a_shard, b_full, *, axis: str, bn: int = 256,
             pltpu.SemaphoreType.DMA,                # recv
             pltpu.SemaphoreType.DMA,                # B fetch
         ],
-        interpret=(pltpu.InterpretParams(dma_execution_mode="eager")
-                   if interpret else False),
-        compiler_params=pltpu.CompilerParams(
+        interpret=jax_compat.pallas_interpret(interpret),
+        compiler_params=jax_compat.tpu_compiler_params(
             collective_id=collective_id,
             dimension_semantics=("arbitrary", "arbitrary")),
     )(a_shard, b_full)

@@ -33,13 +33,16 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import jax_compat
+
 NEG = float(jnp.finfo(jnp.float32).min)
 
 
 def _fd_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
                inbox, kbuf, vbuf, part, fetch_sem, send_sem, recv_sems,
                local_sem,
-               *, axis: str, W: int, blk: int, scale: float):
+               *, axis: str, W: int, blk: int, scale: float,
+               use_barrier: bool = True):
     i = lax.axis_index(axis)
     B, H, D = q_ref.shape
     S_loc, KVH = k_ref.shape[1], k_ref.shape[2]
@@ -47,15 +50,18 @@ def _fd_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
     nblk = S_loc // blk
     cur_len = len_ref[0]
 
-    @pl.when(W > 1)
-    def _barrier():
-        barrier = pltpu.get_barrier_semaphore()
-        for d in range(W):
-            if d != 0:
-                pltpu.semaphore_signal(
-                    barrier, inc=1, device_id=(lax.rem(i + d, W),),
-                    device_id_type=pltpu.DeviceIdType.MESH)
-        pltpu.semaphore_wait(barrier, W - 1)
+    if use_barrier:
+        @pl.when(W > 1)
+        def _barrier():
+            barrier = pltpu.get_barrier_semaphore()
+            for d in range(W):
+                if d != 0:
+                    pltpu.semaphore_signal(
+                        barrier, inc=1,
+                        device_id=jax_compat.pallas_device_id(
+                            lax.rem(i + d, W)),
+                        device_id_type=pltpu.DeviceIdType.MESH)
+            pltpu.semaphore_wait(barrier, W - 1)
 
     # ---------------- Part 1: local attention with online softmax ----------
     for b in range(B):
@@ -102,7 +108,7 @@ def _fd_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
             push = pltpu.make_async_remote_copy(
                 src_ref=part, dst_ref=inbox.at[i],
                 send_sem=send_sem, recv_sem=recv_sems.at[i],
-                device_id=(dst,),
+                device_id=jax_compat.pallas_device_id(dst),
                 device_id_type=pltpu.DeviceIdType.MESH)
             push.start()
             push.wait_send()
@@ -173,10 +179,12 @@ def flash_decode_fused(q, k_shard, v_shard, cur_len, *, axis: str, W: int,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_fd_kernel, axis=axis, W=W, blk=blk, scale=scale),
+        functools.partial(
+            _fd_kernel, axis=axis, W=W, blk=blk, scale=scale,
+            use_barrier=jax_compat.pallas_barrier_supported(interpret)),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
-        interpret=(pltpu.InterpretParams(dma_execution_mode="eager")
-                   if interpret else False),
-        compiler_params=pltpu.CompilerParams(collective_id=collective_id),
+        interpret=jax_compat.pallas_interpret(interpret),
+        compiler_params=jax_compat.tpu_compiler_params(
+            collective_id=collective_id),
     )(cur_len, q, k_shard, v_shard)

@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import jax_compat
+
 
 def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
     k = pl.program_id(2)
@@ -51,8 +53,7 @@ def matmul(a, b, *, bm: int = 256, bk: int = 512, bn: int = 256,
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        interpret=(pltpu.InterpretParams(dma_execution_mode="eager")
-                   if interpret else False),
-        compiler_params=pltpu.CompilerParams(
+        interpret=jax_compat.pallas_interpret(interpret),
+        compiler_params=jax_compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(a, b)

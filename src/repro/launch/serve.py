@@ -30,6 +30,11 @@ def main(argv=None):
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--max-len", type=int, default=256)
     p.add_argument("--max-new", type=int, default=8)
+    p.add_argument("--prefill-chunk", type=int, default=8,
+                   help="prompt tokens consumed per slot per tick")
+    p.add_argument("--stagger", type=int, default=0,
+                   help="admit request i no earlier than tick i*STAGGER "
+                        "(0 = all at once)")
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--tp", type=int, default=1)
     p.add_argument("--fusion-mode", default="auto",
@@ -58,15 +63,18 @@ def main(argv=None):
             params = tree["params"]
             print(f"[serve] restored step {manifest['step']}")
 
-        eng = Engine(params, cfg, batch=args.batch, max_len=args.max_len)
+        eng = Engine(params, cfg, batch=args.batch, max_len=args.max_len,
+                     prefill_chunk=args.prefill_chunk)
         rng = jax.random.PRNGKey(args.seed + 1)
         for i in range(args.requests):
             rng, k = jax.random.split(rng)
             plen = 2 + int(jax.random.randint(k, (), 0, 6))
+            plen = min(plen, max(1, args.max_len - 2))
             prompt = [int(t) for t in
                       jax.random.randint(k, (plen,), 1, cfg.vocab_size)]
             eng.submit(Request(rid=i, prompt=prompt,
-                               max_new_tokens=args.max_new))
+                               max_new_tokens=args.max_new),
+                       at_tick=i * args.stagger)
         t0 = time.time()
         done = eng.run()
         dt = time.time() - t0
@@ -75,7 +83,8 @@ def main(argv=None):
         stats = {"requests": len(done), "new_tokens": toks,
                  "wall_s": round(dt, 3),
                  "tok_per_s": round(toks / dt, 2),
-                 "p50_latency_s": round(sorted(lat)[len(lat) // 2], 3)}
+                 "p50_latency_s": round(sorted(lat)[len(lat) // 2], 3),
+                 **eng.metrics(done)}
         print(f"[serve] {stats}")
         if args.metrics_file:
             with open(args.metrics_file, "w") as f:

@@ -188,9 +188,17 @@ def apply_attn(params, x, cfg, *, positions=None, dense_threshold=2048):
 
 
 # --------------------------------------------------------------- decode step
-def decode_attn_step(params, x, cache, cur_len, cfg):
+def decode_attn_step(params, x, cache, cur_len, cfg, active=None):
     """One-token decode. x: (B, 1, d); cache: dict(k, v) strided seq-sharded
-    (B, S_max, KVH, hd). Returns (out (B,1,d), new cache)."""
+    (B, S_max, KVH, hd). Returns (out (B,1,d), new cache).
+
+    ``cur_len`` may be a scalar (lockstep) or a (B,) per-slot length
+    vector that already includes this step's token for active slots.
+    ``active`` (B,) bool marks slots that consume a token this step:
+    inactive slots keep their cache byte-identical (the K/V write is a
+    read-modify-write predicated on ``active``) and their length — this
+    is what lets continuous batching run slots at different positions
+    and chunked prefill stop early for short prompts."""
     ctx = dctx.current()
     B = x.shape[0]
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -224,7 +232,8 @@ def decode_attn_step(params, x, cache, cur_len, cfg):
             q[:, 0], k[:, 0], v[:, 0], cache["k"], cache["v"], cl,
             scale=1.0 / (hd ** 0.5),
             window=None if rolling else cfg.sliding_window,
-            rolling_len=S_max if rolling else None)
+            rolling_len=S_max if rolling else None,
+            active=active)
         o = o.reshape(B, 1, H * hd)
         out = patterns.project_k_sharded(o, params["wo"])
         return out, {"k": ck, "v": cv}
@@ -233,10 +242,18 @@ def decode_attn_step(params, x, cache, cur_len, cfg):
         p = p % S_max
     idx = (p % W) * (S_max // W) + p // W
     if cl.ndim:  # per-slot positions (continuous batching)
-        upd = jax.vmap(lambda cb, kb, ib: lax.dynamic_update_slice(
-            cb, kb, (ib, 0, 0)))
-        ck = upd(cache["k"], k.astype(cache["k"].dtype), idx)
-        cv = upd(cache["v"], v.astype(cache["v"].dtype), idx)
+        # Read-modify-write: inactive slots rewrite their current value
+        # at a clamped index, so the cache stays untouched for them.
+        act = (jnp.ones((B,), bool) if active is None
+               else jnp.asarray(active))
+
+        def upd_one(cb, nb, ib, ab):
+            cur = lax.dynamic_slice(cb, (ib, 0, 0), nb.shape)
+            return lax.dynamic_update_slice(
+                cb, jnp.where(ab, nb, cur), (ib, 0, 0))
+        upd = jax.vmap(upd_one)
+        ck = upd(cache["k"], k.astype(cache["k"].dtype), idx, act)
+        cv = upd(cache["v"], v.astype(cache["v"].dtype), idx, act)
     else:
         ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
                                       (0, idx, 0, 0))

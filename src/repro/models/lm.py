@@ -135,8 +135,11 @@ def loss_fn(params, batch, cfg, aux_weight: float = 0.01):
 
 # ------------------------------------------------------------------ decode
 def init_decode_state(params, cfg, batch: int, max_len: int):
-    """cur_len is per-slot (B,) so continuous batching can admit requests
-    into slots at different positions."""
+    """Decode state for continuous batching: ``cur_len`` is a per-slot
+    (B,) position vector, NOT a shared scalar — each cache slot advances
+    independently, so the engine can admit a request into a freed slot
+    mid-run and its prompt starts at position 0 while neighbours keep
+    decoding at their own positions."""
     return {"caches": transformer.init_caches(cfg, batch, max_len, cfg.dtype),
             "cur_len": jnp.zeros((batch,), jnp.int32)}
 
@@ -154,11 +157,21 @@ def reset_slot(state, slot: int):
             "cur_len": state["cur_len"].at[slot].set(0)}
 
 
-def decode_step(params, token, state, cfg):
+def decode_step(params, token, state, cfg, active=None):
     """token: (B, 1) int32; one autoregressive step. Returns
-    (logits (B, 1, V), new_state)."""
+    (logits (B, 1, V), new_state).
+
+    ``active`` (B,) bool — slots that consume a token this step. An
+    inactive slot's caches, recurrent states, and ``cur_len`` entry are
+    left byte-identical, so heterogeneous slots (mid-prefill, decoding,
+    idle) can share one jitted step. ``active=None`` means all slots
+    step (the lockstep special case)."""
     ctx = dctx.current()
-    cur_len = state["cur_len"] + 1            # includes the new token
+    if active is None:
+        cur_len = state["cur_len"] + 1        # includes the new token
+    else:
+        active = jnp.asarray(active)
+        cur_len = state["cur_len"] + active.astype(jnp.int32)
     # decode x layout: d-model dim sharded over `data`, MATCHING the FSDP
     # weight shards — every projection becomes a local partial dot + a
     # tiny (B,1,out) psum, and the fp32 master weights are never
@@ -171,7 +184,37 @@ def decode_step(params, token, state, cfg):
     if cfg.block == "rwkv":
         x = apply_norm(params["ln_in"], x, "layernorm")
     x, caches = transformer.decode(params["backbone"], x, state["caches"],
-                                   cur_len, cfg)
+                                   cur_len, cfg, active=active)
     x = apply_norm(params["ln_f"], x, cfg.norm)
     logits = logits_fn(params, x, cfg)
     return logits, {"caches": caches, "cur_len": cur_len}
+
+
+def decode_chunk(params, tokens, counts, state, cfg):
+    """Chunked batched prefill: consume up to C tokens per slot in ONE
+    jitted call (a ``lax.scan`` of ``decode_step`` over the chunk, so
+    dispatch/launch overhead is paid once per tick, not per token).
+
+    tokens: (B, C) int32 — each slot's next tokens, left-aligned;
+    counts: (B,) int32  — how many of the C are real for each slot
+                          (0 = idle slot, 1 = plain decode step,
+                          2..C = prompt chunk).
+    Returns (logits (B, 1, V) from each slot's LAST consumed token,
+    new_state). Slots with count 0 return zero logits.
+    """
+    B, C = tokens.shape
+    V = cfg.vocab_size
+
+    def body(carry, j):
+        st, logits = carry
+        act = j < counts
+        lg, st = decode_step(params, tokens[:, j][:, None], st, cfg,
+                             active=act)
+        logits = jnp.where(act[:, None, None], lg.astype(logits.dtype),
+                           logits)
+        return (st, logits), None
+
+    logits0 = jnp.zeros((B, 1, V), jnp.float32)
+    (state, logits), _ = jax.lax.scan(body, (state, logits0),
+                                      jnp.arange(C))
+    return logits, state

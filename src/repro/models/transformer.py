@@ -182,14 +182,30 @@ def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     raise ValueError(cfg.block)
 
 
-def decode(params, x, caches, cur_len, cfg):
-    """One-token step. x: (B, 1, d). Returns (x, new_caches)."""
+def _sel_state(active, old, new):
+    """Per-slot predicated state update: slots with active=False keep
+    their old recurrent state (continuous batching / chunked prefill).
+    Leaves have batch at dim 0 here (inside the per-layer body)."""
+    if active is None:
+        return new
+    return jax.tree.map(
+        lambda o, n: jnp.where(
+            active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), old, new)
+
+
+def decode(params, x, caches, cur_len, cfg, active=None):
+    """One-token step. x: (B, 1, d). Returns (x, new_caches).
+
+    ``cur_len``: scalar or per-slot (B,) lengths INCLUDING this token
+    for active slots. ``active`` (B,) bool: slots that consume a token
+    this step; inactive slots leave every cache/state leaf unchanged."""
     if cfg.block in ("attn_mlp", "attn_moe"):
         def body(x, inp):
             lp, cache = inp
             h = apply_norm(lp["ln1"], x, cfg.norm)
             y, new_cache = attention.decode_attn_step(lp["attn"], h, cache,
-                                                      cur_len, cfg)
+                                                      cur_len, cfg,
+                                                      active=active)
             x = x + y
             h = apply_norm(lp["ln2"], x, cfg.norm)
             if "moe" in lp:
@@ -229,7 +245,7 @@ def decode(params, x, caches, cur_len, cfg):
                 h = apply_norm(lp["ln1"], x, cfg.norm)
                 y, nc = mamba2.apply_mamba_decode(lp["mamba"], h, cfg=cfg,
                                                   cache=lc)
-                return x + y, nc
+                return x + y, _sel_state(active, lc, nc)
             if cfg.scan_layers:
                 x, ngc = lax.scan(inner, x, (gp, gc))
             else:
@@ -240,7 +256,7 @@ def decode(params, x, caches, cur_len, cfg):
                 ngc = jax.tree.map(lambda *xs: jnp.stack(xs), *accs)
             h = apply_norm(shared["ln1"], x, cfg.norm)
             y, nac = attention.decode_attn_step(shared["attn"], h, ac,
-                                                cur_len, cfg)
+                                                cur_len, cfg, active=active)
             x = x + y
             h = apply_norm(shared["ln2"], x, cfg.norm)
             x = x + mlp.apply_mlp_decode(shared["mlp"], h, cfg)
@@ -264,7 +280,7 @@ def decode(params, x, caches, cur_len, cfg):
                 h = apply_norm(lp["ln1"], x, cfg.norm)
                 y, nc = mamba2.apply_mamba_decode(lp["mamba"], h, cfg=cfg,
                                                   cache=lc)
-                return x + y, nc
+                return x + y, _sel_state(active, lc, nc)
             if cfg.scan_layers:
                 x, ntail = lax.scan(inner, x, (tail, mtail))
             else:
@@ -281,8 +297,8 @@ def decode(params, x, caches, cur_len, cfg):
     if cfg.block == "rwkv":
         def body(x, inp):
             lp, st = inp
-            x, nst = rwkv6.apply_rwkv_block(lp, x, cfg, state=st)
-            return x, nst
+            nx, nst = rwkv6.apply_rwkv_block(lp, x, cfg, state=st)
+            return nx, _sel_state(active, st, nst)
         if cfg.scan_layers:
             x, new_states = lax.scan(body, x, (params["layers"], caches))
             return x, new_states

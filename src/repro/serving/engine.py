@@ -1,29 +1,45 @@
-"""Batched serving engine: prefill + decode with continuous batching.
+"""Continuous-batching serving engine: per-slot prefill + decode.
 
-The decode step is where the paper's Flash Decode lives: the jitted
-``serve_step`` runs one token for the whole active batch against the
-sequence-sharded KV cache, with the partial-softmax combine executed by
-the configured fusion mode (bsp / ring / pallas).
+The decode step is where the paper's Flash Decode lives: one jitted
+step runs the whole active batch against the sequence-sharded KV cache,
+with the partial-softmax combine executed by the configured fusion mode
+(bsp / ring / pallas).
 
-Requests are queued; each scheduler tick admits new requests into free
-cache slots (prefill writes their prompt into the cache via repeated
-decode steps over the prompt — token-at-a-time prefill keeps this engine
-simple; the batched-prefill path exists in examples/serve_decode.py).
+This is TRUE per-slot continuous batching: the jitted state carries a
+(B,) position vector (``repro.models.lm.init_decode_state``), so every
+slot advances independently. A request can be admitted into a freed
+slot at ANY tick — its prompt starts writing at position 0 while the
+neighbouring slots keep decoding at their own positions, with no KV
+aliasing between them.
+
+Scheduling per tick:
+
+1. admit queued requests (whose arrival tick has passed) into free
+   ``CachePool`` slots;
+2. build a (B, C) token block: prefilling slots take their next
+   ``min(C, remaining)`` prompt tokens (chunked batched prefill — one
+   jitted call consumes the whole chunk via ``lm.decode_chunk``),
+   decoding slots take their last sampled token (count 1), idle slots
+   count 0;
+3. one jitted step; sample next tokens from each slot's last-consumed-
+   token logits; retire finished requests and free their slots.
+
+Per-request metrics: TTFT (submit -> first generated token) and TPOT
+(mean inter-token time over the generated tokens).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed import context as dctx
 from repro.models import lm
 from repro.serving import sampler as sampler_lib
+from repro.serving.kv_cache import CachePool
 
 
 @dataclasses.dataclass
@@ -31,78 +47,192 @@ class Request:
     rid: int
     prompt: list[int]
     max_new_tokens: int = 16
+    arrival_tick: int = 0            # earliest tick it may be admitted
     out_tokens: list = dataclasses.field(default_factory=list)
     slot: int = -1
+    consumed: int = 0                # prompt tokens written to the cache
     done: bool = False
     submitted_t: float = 0.0
+    admitted_t: float = 0.0
+    first_token_t: float = 0.0
     finished_t: float = 0.0
+
+    @property
+    def prefilling(self) -> bool:
+        return self.consumed < len(self.prompt)
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token (submit -> first generated token)."""
+        return max(self.first_token_t - self.submitted_t, 0.0)
+
+    @property
+    def tpot_s(self) -> float:
+        """Mean time per output token after the first."""
+        n = len(self.out_tokens)
+        if n <= 1:
+            return 0.0
+        return max(self.finished_t - self.first_token_t, 0.0) / (n - 1)
 
 
 class Engine:
+    """Continuous-batching scheduler over a ``CachePool``.
+
+    ``prefill_chunk`` — max prompt tokens a slot consumes per tick. 1
+    degrades to token-at-a-time prefill; larger values amortize
+    dispatch overhead and shorten TTFT under load.
+    """
+
     def __init__(self, params, cfg, *, batch: int = 8, max_len: int = 512,
-                 sampler: str = "greedy"):
+                 prefill_chunk: int = 8, sampler: str = "greedy"):
         self.params = params
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
+        self.prefill_chunk = max(1, int(prefill_chunk))
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}   # slot -> request
-        self.state = lm.init_decode_state(params, cfg, batch, max_len)
-        # per-slot position (the jitted state keeps ONE cur_len; per-slot
-        # lengths are tracked host-side and folded into the mask via the
-        # cache contract: all slots advance together in this simple engine,
-        # so admission aligns to ticks)
-        self.lengths = np.zeros(batch, np.int32)
-        self.free_slots = list(range(batch))
+        self.pool = CachePool(params, cfg, batch, max_len)
         self.sampler = sampler
-        self._step = jax.jit(
-            lambda p, t, s: lm.decode_step(p, t, s, cfg))
+        self.tick_count = 0
+        self.dispatch_count = 0     # ticks that actually ran a jitted step
+        # two jitted paths sharing the pool state: a 1-token step for
+        # all-decoding ticks, a C-token scan when any slot is prefilling
+        self._step1 = jax.jit(
+            lambda p, t, a, s: lm.decode_step(p, t, s, cfg, active=a))
+        self._stepC = jax.jit(
+            lambda p, t, c, s: lm.decode_chunk(p, t, c, s, cfg))
 
-    def submit(self, req: Request):
+    # ------------------------------------------------------------- queueing
+    def submit(self, req: Request, at_tick: int | None = None):
+        """Queue a request. ``at_tick`` (or ``req.arrival_tick``) delays
+        admission until that scheduler tick — this is how staggered
+        arrivals are expressed in tests/benchmarks."""
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} "
+                f">= max_len {self.max_len} — the cache cannot hold the "
+                f"prompt plus one generated token; raise max_len or "
+                f"truncate the prompt")
         req.submitted_t = time.time()
+        if at_tick is not None:
+            req.arrival_tick = at_tick
         self.queue.append(req)
 
     def _admit(self):
-        while self.queue and self.free_slots:
-            slot = self.free_slots.pop(0)
+        """Admit every already-eligible request (FCFS among eligible:
+        a future-arrival at the queue head must not head-of-line-block
+        requests behind it whose tick has come)."""
+        admitted = []
+        pending = []
+        while self.queue and self.pool.n_free:
             req = self.queue.popleft()
+            if req.arrival_tick > self.tick_count:
+                pending.append(req)
+                continue
+            slot = self.pool.alloc()
             req.slot = slot
+            req.admitted_t = time.time()
             self.active[slot] = req
-            self.lengths[slot] = 0
-            self.state = lm.reset_slot(self.state, slot)
-        return len(self.active)
+            admitted.append(req)
+        for req in reversed(pending):
+            self.queue.appendleft(req)
+        return admitted
+
+    # ----------------------------------------------------------- scheduling
+    def tick(self) -> list[Request]:
+        """One scheduler step. Returns requests that finished this tick."""
+        self._admit()
+        self.tick_count += 1
+        if not self.active:
+            return []
+        C = self.prefill_chunk
+        tok = np.zeros((self.batch, C), np.int32)
+        cnt = np.zeros((self.batch,), np.int32)
+        for slot, req in self.active.items():
+            if req.prefilling:
+                n = min(C, len(req.prompt) - req.consumed)
+                tok[slot, :n] = req.prompt[req.consumed:req.consumed + n]
+                cnt[slot] = n
+            else:
+                tok[slot, 0] = (req.out_tokens[-1] if req.out_tokens
+                                else req.prompt[-1])
+                cnt[slot] = 1
+
+        cmax = int(cnt.max(initial=0))
+        self.dispatch_count += 1
+        if cmax <= 1:
+            logits, self.pool.state = self._step1(
+                self.params, jnp.asarray(tok[:, :1]),
+                jnp.asarray(cnt > 0), self.pool.state)
+        else:
+            # bucket the scan length to the next power of two so ticks
+            # with little prefill left don't pay the full chunk, while
+            # compile count stays bounded at log2(prefill_chunk)
+            cw = 2
+            while cw < cmax:
+                cw *= 2
+            cw = min(cw, C)
+            logits, self.pool.state = self._stepC(
+                self.params, jnp.asarray(tok[:, :cw]), jnp.asarray(cnt),
+                self.pool.state)
+        nxt = np.asarray(sampler_lib.greedy(logits))
+
+        finished = []
+        now = time.time()
+        for slot, req in list(self.active.items()):
+            n = int(cnt[slot])
+            if n == 0:
+                continue
+            self.pool.advance(slot, n)
+            cache_full = int(self.pool.lengths[slot]) + 1 >= self.max_len
+            if req.prefilling:
+                req.consumed += n
+                if req.prefilling and not cache_full:  # still mid-prompt
+                    continue
+            if not req.prefilling:
+                # the logits after this slot's last consumed token give
+                # the next output token (the first one arrives on the
+                # tick that completes the prefill)
+                req.out_tokens.append(int(nxt[slot, 0]))
+                if len(req.out_tokens) == 1:
+                    req.first_token_t = now
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or cache_full):
+                req.done = True
+                req.finished_t = now
+                finished.append(req)
+                del self.active[slot]
+                self.pool.free(slot)
+        return finished
 
     def run(self, max_ticks: int = 10_000) -> list[Request]:
-        """Run until all submitted requests finish. Single shared timeline:
-        at each tick every active slot consumes either its next prompt
-        token (prefill) or its last generated token (decode)."""
+        """Run until all submitted requests finish (or max_ticks ticks
+        elapse IN THIS CALL — the budget is per-call, so a long-lived
+        engine can drain, accept new submits, and run again)."""
         finished = []
-        tick = 0
-        while (self.queue or self.active) and tick < max_ticks:
-            self._admit()
-            tok = np.zeros((self.batch, 1), np.int32)
-            for slot, req in self.active.items():
-                pos = int(self.lengths[slot])
-                consumed = len(req.out_tokens)
-                if pos < len(req.prompt):
-                    tok[slot, 0] = req.prompt[pos]
-                else:
-                    tok[slot, 0] = (req.out_tokens[-1] if req.out_tokens
-                                    else req.prompt[-1])
-            logits, self.state = self._step(self.params,
-                                            jnp.asarray(tok), self.state)
-            nxt = np.asarray(sampler_lib.greedy(logits))
-            for slot, req in list(self.active.items()):
-                self.lengths[slot] += 1
-                pos = int(self.lengths[slot])
-                if pos >= len(req.prompt):          # generating
-                    req.out_tokens.append(int(nxt[slot, 0]))
-                    if (len(req.out_tokens) >= req.max_new_tokens
-                            or pos >= self.max_len - 1):
-                        req.done = True
-                        req.finished_t = time.time()
-                        finished.append(req)
-                        del self.active[slot]
-                        self.free_slots.append(slot)
-            tick += 1
+        start = self.tick_count
+        while ((self.queue or self.active)
+               and self.tick_count - start < max_ticks):
+            finished.extend(self.tick())
         return finished
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self, done: list[Request]) -> dict:
+        toks = sum(len(r.out_tokens) for r in done)
+        # zero-output requests never produced a first token: excluding
+        # them keeps the TTFT percentiles honest
+        ttfts = sorted(r.ttft_s for r in done if r.out_tokens)
+        tpots = sorted(r.tpot_s for r in done if len(r.out_tokens) > 1)
+
+        def mid(xs):
+            return xs[len(xs) // 2] if xs else 0.0
+        return {
+            "requests": len(done),
+            "new_tokens": toks,
+            "ticks": self.tick_count,
+            "dispatches": self.dispatch_count,
+            "p50_ttft_s": round(mid(ttfts), 4),
+            "max_ttft_s": round(ttfts[-1], 4) if ttfts else 0.0,
+            "p50_tpot_s": round(mid(tpots), 4),
+        }

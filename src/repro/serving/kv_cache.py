@@ -1,47 +1,77 @@
 """Serving-side KV cache management.
 
 The model-level cache layout (strided sequence sharding) lives in
-repro.models.attention/transformer; this module adds the serving
-concerns: slot allocation for continuous batching, per-sequence lengths,
-and prefill-into-cache.
+repro.models.attention/transformer; this module owns the serving
+concerns: the jitted decode state (caches + per-slot position vector),
+slot allocation for continuous batching, and per-slot length mirrors on
+the host so the scheduler can make admission decisions without a
+device sync.
+
+``CachePool`` is the single owner of the decode state: the engine
+allocates/frees slots through it and runs jitted steps against
+``pool.state``. Slots advance independently (``cur_len`` is (B,)), so
+a request admitted into a freed slot mid-run starts at position 0
+while its neighbours keep decoding at their own positions.
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models import transformer
+from repro.models import lm
 
 
-@dataclasses.dataclass
+# eq/repr off: the pool holds the full params pytree and the decode
+# state — the generated __eq__ would crash on array truthiness and
+# __repr__ would stringify the whole model
+@dataclasses.dataclass(eq=False, repr=False)
 class CachePool:
-    """Fixed-capacity batch of cache slots for continuous batching."""
+    """Fixed-capacity batch of independently-positioned cache slots."""
+    params: object
     cfg: object
     batch: int
     max_len: int
 
+    def __repr__(self):
+        return (f"CachePool(batch={self.batch}, max_len={self.max_len}, "
+                f"active={self.n_active}/{self.batch})")
+
     def __post_init__(self):
-        self.caches = transformer.init_caches(self.cfg, self.batch,
-                                              self.max_len, self.cfg.dtype)
+        self.state = lm.init_decode_state(self.params, self.cfg,
+                                          self.batch, self.max_len)
+        # host mirror of state["cur_len"]: scheduler reads/updates these
+        # synchronously; the device vector is advanced by the jitted step
         self.lengths = np.zeros(self.batch, np.int32)
         self.active = np.zeros(self.batch, bool)
 
     def alloc(self) -> int | None:
+        """Claim a free slot and zero its cache/position, or None."""
         free = np.nonzero(~self.active)[0]
         if len(free) == 0:
             return None
         slot = int(free[0])
         self.active[slot] = True
         self.lengths[slot] = 0
+        self.state = lm.reset_slot(self.state, slot)
         return slot
 
     def free(self, slot: int):
         self.active[slot] = False
         self.lengths[slot] = 0
 
+    def advance(self, slot: int, n: int):
+        """Record that `slot` consumed n tokens this tick (host mirror;
+        the device cur_len advanced inside the jitted step)."""
+        self.lengths[slot] += n
+
     @property
     def n_active(self) -> int:
         return int(self.active.sum())
+
+    @property
+    def n_free(self) -> int:
+        return self.batch - self.n_active
+
+    def occupancy(self) -> float:
+        return self.n_active / self.batch

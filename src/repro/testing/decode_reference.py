@@ -1,0 +1,29 @@
+"""Shared solo-run decode reference for serving correctness tests.
+
+The continuous-batching regression suites (single-device tier in
+tests/test_serving.py and the bsp/ring battery check) both compare
+engine output against this: feed the prompt token-at-a-time into a
+fresh batch-of-1 state, then greedy-generate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def reference_generate(params, cfg, prompt, n_new: int,
+                       max_len: int = 512) -> list[int]:
+    """Slot-free oracle: what `prompt` decodes to on its own."""
+    state = lm.init_decode_state(params, cfg, 1, max_len)
+    step = jax.jit(lambda p, t, s: lm.decode_step(p, t, s, cfg))
+    logits = None
+    for t in prompt:
+        logits, state = step(params, jnp.array([[t]], jnp.int32), state)
+    out = []
+    for _ in range(n_new):
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        logits, state = step(params, jnp.array([[nxt]], jnp.int32), state)
+    return out

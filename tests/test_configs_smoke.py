@@ -57,7 +57,15 @@ def test_smoke_forward_loss(arch):
     assert abs(float(metrics["ce"]) - np.log(cfg.vocab_size)) < 1.0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# grad+optimizer compile per arch is the bulk of this module's runtime;
+# the fast tier keeps one representative per backbone family, the rest
+# ride in the slow tier (forward/loss smoke above stays fast for ALL)
+_FAST_TRAIN = {"llama3-8b", "olmoe-1b-7b", "zamba2-1.2b", "rwkv6-3b"}
+
+
+@pytest.mark.parametrize(
+    "arch", [a if a in _FAST_TRAIN else pytest.param(a, marks=pytest.mark.slow)
+             for a in ARCH_IDS])
 def test_smoke_train_step(arch):
     cfg = smoke_config(get_config(arch))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)

@@ -13,6 +13,10 @@ import pytest
 
 from repro.testing import distributed_checks as dc
 
+# each check spawns its own 8-device subprocess: minutes of wall clock —
+# the fast CI tier (-m "not slow") skips the whole battery
+pytestmark = pytest.mark.slow
+
 CHECK_NAMES = [f.__name__ for f in dc.ALL_CHECKS]
 
 

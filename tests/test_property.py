@@ -1,7 +1,15 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+``hypothesis`` is an optional dev dependency; the module is skipped
+cleanly (instead of failing collection) when it isn't installed.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (pip install hypothesis)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import flash_decode as fd

@@ -15,18 +15,10 @@ def _setup(batch=4):
 
 
 def _reference_generate(params, cfg, prompt, n_new):
-    """Slot-free reference: fresh state, feed prompt then greedy-generate."""
-    state = lm.init_decode_state(params, cfg, 1, 512)
-    step = jax.jit(lambda p, t, s: lm.decode_step(p, t, s, cfg))
-    logits = None
-    for t in prompt:
-        logits, state = step(params, jnp.array([[t]], jnp.int32), state)
-    out = []
-    for _ in range(n_new):
-        nxt = int(jnp.argmax(logits[0, -1]))
-        out.append(nxt)
-        logits, state = step(params, jnp.array([[nxt]], jnp.int32), state)
-    return out
+    """Slot-free reference: fresh state, feed prompt then greedy-generate
+    (shared with the bsp/ring battery check)."""
+    from repro.testing.decode_reference import reference_generate
+    return reference_generate(params, cfg, prompt, n_new, 512)
 
 
 def test_engine_matches_reference():
@@ -59,6 +51,148 @@ def test_continuous_batching_admission():
     for r in done:
         want = _reference_generate(params, cfg, r.prompt, 3)
         assert r.out_tokens == want, (r.rid, r.out_tokens, want)
+
+
+def test_staggered_admission_matches_solo_runs():
+    """THE per-slot continuous-batching regression (single-device tier):
+    requests arriving at different ticks with different prompt lengths,
+    admitted mid-run into freed slots, decode token-for-token the same
+    outputs as running each request alone. (The bsp/ring fusion-mode
+    variant runs in the subprocess battery:
+    test_distributed.py::test_check[check_engine_staggered_admission].)"""
+    cfg, params = _setup()
+    for chunk in (1, 4):
+        eng = Engine(params, cfg, batch=2, max_len=128,
+                     prefill_chunk=chunk)
+        prompts = [[1, 2, 3, 4, 5, 6, 7], [3, 4], [5, 6, 9, 11, 13],
+                   [9, 8, 7], [2] * 11]
+        arrivals = [0, 0, 1, 3, 6]
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=4,
+                        arrival_tick=a)
+                for i, (p, a) in enumerate(zip(prompts, arrivals))]
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == len(prompts)
+        for r in done:
+            want = _reference_generate(params, cfg, r.prompt, 4)
+            assert r.out_tokens == want, \
+                (chunk, r.rid, r.out_tokens, want)
+
+
+def test_decode_step_active_mask_freezes_inactive_slots():
+    """Unit: slots with active=False keep cache, recurrent state and
+    cur_len byte-identical across a decode_step."""
+    cfg, params = _setup()
+    B = 3
+    state = lm.init_decode_state(params, cfg, B, 32)
+    step = jax.jit(lambda p, t, a, s: lm.decode_step(p, t, s, cfg,
+                                                     active=a))
+    # warm all slots with 2 tokens
+    for t in (5, 7):
+        tok = jnp.full((B, 1), t, jnp.int32)
+        _, state = step(params, tok, jnp.ones((B,), bool), state)
+    # step only slot 1
+    act = jnp.array([False, True, False])
+    _, new_state = step(params, jnp.full((B, 1), 9, jnp.int32), act, state)
+    assert np.asarray(new_state["cur_len"]).tolist() == [2, 3, 2]
+    for old_leaf, new_leaf in zip(jax.tree.leaves(state["caches"]),
+                                  jax.tree.leaves(new_state["caches"])):
+        o, n = np.asarray(old_leaf), np.asarray(new_leaf)
+        # caches are stacked (layers, B, ...): batch is dim 1
+        np.testing.assert_array_equal(o[:, 0], n[:, 0])
+        np.testing.assert_array_equal(o[:, 2], n[:, 2])
+    # ...and the active slot DID change position
+    assert not all(
+        np.array_equal(np.asarray(o)[:, 1], np.asarray(n)[:, 1])
+        for o, n in zip(jax.tree.leaves(state["caches"]),
+                        jax.tree.leaves(new_state["caches"])))
+
+
+def test_chunked_prefill_matches_token_at_a_time():
+    """Unit: lm.decode_chunk with heterogeneous per-slot counts equals
+    feeding the same tokens one step at a time."""
+    cfg, params = _setup()
+    B, C = 2, 4
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (B, 6),
+                                         1, cfg.vocab_size))
+    # reference: per-slot token-at-a-time with per-slot counts [6, 3]
+    counts = [6, 3]
+    step = jax.jit(lambda p, t, s: lm.decode_step(p, t, s, cfg))
+    want = {}
+    for b in range(B):
+        st = lm.init_decode_state(params, cfg, 1, 32)
+        for t in range(counts[b]):
+            lg, st = step(params, jnp.asarray(toks[b:b + 1, t:t + 1]), st)
+        want[b] = np.asarray(lg[0])
+    # chunked: two ticks of C=4 and (4,) counts [4,3] then [2,0]
+    chunk = jax.jit(lambda p, t, c, s: lm.decode_chunk(p, t, c, s, cfg))
+    st = lm.init_decode_state(params, cfg, B, 32)
+    lg1, st = chunk(params, jnp.asarray(toks[:, :4]),
+                    jnp.array([4, 3], jnp.int32), st)
+    tk2 = np.zeros((B, C), np.int32)
+    tk2[0, :2] = toks[0, 4:6]
+    lg2, st = chunk(params, jnp.asarray(tk2),
+                    jnp.array([2, 0], jnp.int32), st)
+    assert np.asarray(st["cur_len"]).tolist() == counts
+    np.testing.assert_allclose(np.asarray(lg2[0]), want[0],
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(lg1[1]), want[1],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_admission_skips_future_arrivals():
+    """A future-tick request at the queue head must not head-of-line
+    block an already-eligible request behind it."""
+    cfg, params = _setup()
+    eng = Engine(params, cfg, batch=2, max_len=64)
+    late = Request(rid=0, prompt=[1, 2], max_new_tokens=2)
+    early = Request(rid=1, prompt=[3, 4], max_new_tokens=2)
+    eng.submit(late, at_tick=50)
+    eng.submit(early, at_tick=0)
+    eng.tick()
+    assert early.slot >= 0, "eligible request stuck behind future arrival"
+    assert late.slot == -1
+    done = eng.run(max_ticks=200)
+    assert {r.rid for r in done} == {0, 1}
+
+
+def test_submit_rejects_oversized_prompt():
+    cfg, params = _setup()
+    eng = Engine(params, cfg, batch=2, max_len=8)
+    import pytest as _pytest
+    with _pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(rid=0, prompt=list(range(1, 10)),
+                           max_new_tokens=2))
+
+
+def test_cache_pool_slot_lifecycle():
+    """CachePool owns the decode state: alloc zeroes the slot, free
+    recycles it, occupancy tracks the live set."""
+    from repro.serving.kv_cache import CachePool
+    cfg, params = _setup()
+    pool = CachePool(params, cfg, batch=2, max_len=32)
+    s0, s1 = pool.alloc(), pool.alloc()
+    assert {s0, s1} == {0, 1} and pool.alloc() is None
+    assert pool.occupancy() == 1.0
+    pool.advance(s0, 5)
+    pool.free(s1)
+    assert pool.n_free == 1 and pool.lengths[s0] == 5
+    s2 = pool.alloc()
+    assert s2 == s1 and pool.lengths[s2] == 0
+
+
+def test_engine_metrics_ttft_tpot():
+    cfg, params = _setup()
+    eng = Engine(params, cfg, batch=2, max_len=64, prefill_chunk=4)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4))
+    done = eng.run()
+    m = eng.metrics(done)
+    assert m["requests"] == 1 and m["new_tokens"] == 4
+    r = done[0]
+    assert r.first_token_t >= r.submitted_t
+    assert r.finished_t >= r.first_token_t
+    assert r.ttft_s >= 0 and r.tpot_s >= 0
 
 
 def test_engine_throughput_accounting():

@@ -9,6 +9,7 @@ The paper's claim structure, reproduced as tests:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import taxes
 from repro.launch import train as train_mod
@@ -35,6 +36,7 @@ def test_pick_mode_latency_sensitive():
     small = taxes.ag_gemm_op_shape(M=16, K=8192, N=1024, W=8)
     assert taxes.pick_mode(small) != "bsp"
 
+@pytest.mark.slow
 def test_end_to_end_training_learns():
     metrics = train_mod.main([
         "--arch", "llama3-8b", "--smoke", "--steps", "40", "--warmup", "5",
@@ -42,6 +44,7 @@ def test_end_to_end_training_learns():
     losses = [m["loss"] for m in metrics]
     assert losses[-1] < losses[0] - 0.15, (losses[0], losses[-1])
 
+@pytest.mark.slow
 def test_training_is_deterministic():
     args = ["--arch", "phi3-mini-3.8b", "--smoke", "--steps", "4",
             "--batch", "2", "--seq", "32", "--log-every", "1"]
