@@ -110,8 +110,10 @@ def bench_scaling():
 def bench_serving_engine():
     """Continuous-batching engine under staggered traffic: lockstep
     token-at-a-time prefill (chunk=1) vs chunked batched prefill.
-    Derived column: jitted dispatches to drain the same workload (idle
-    ticks excluded) — the quantity chunked prefill cuts."""
+    Derived columns: jitted dispatches to drain the same workload (idle
+    ticks excluded) — the quantity chunked prefill cuts — and the paged
+    pool's block-occupancy high-water mark, the quantity that bounds
+    how much HBM the workload actually pinned."""
     from repro.configs import get_config, smoke_config
     from repro.models import lm as lm_mod
     from repro.serving.engine import Engine, Request
@@ -132,7 +134,43 @@ def bench_serving_engine():
         dt = (time.perf_counter() - t0) * 1e6
         m = eng.metrics(done)
         print(f"serve_staggered_chunk{chunk},{dt:.1f},"
-              f"dispatches={m['dispatches']};p50_ttft_s={m['p50_ttft_s']}")
+              f"dispatches={m['dispatches']};p50_ttft_s={m['p50_ttft_s']};"
+              f"kv_blocks_hwm={m['kv_blocks_hwm']}/{m['kv_blocks']};"
+              f"kv_block_occupancy={m['kv_block_occupancy']}")
+
+
+def bench_paged_capacity():
+    """Paged vs contiguous KV capacity under a long/short mix: the same
+    workload on a pool sized to ~22% of the contiguous stripes, plus the
+    prefix-cache effect on repeated system prompts. Derived columns:
+    block high-water mark (what the traffic really pinned) and prompt
+    tokens served from the prefix cache instead of re-prefilled."""
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm as lm_mod
+    from repro.serving.engine import Engine, Request
+
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=2)
+    params = lm_mod.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    system = list(rng.integers(1, cfg.vocab_size, 48))
+    prompts = [list(rng.integers(1, cfg.vocab_size, 120))]
+    prompts += [system + list(rng.integers(1, cfg.vocab_size, 8))
+                for _ in range(6)]
+    for n_blocks, tag in ((None, "parity"), (40, "paged40")):
+        eng = Engine(params, cfg, batch=8, max_len=192, prefill_chunk=16,
+                     block_size=16, n_blocks=n_blocks)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=[int(t) for t in p],
+                               max_new_tokens=8), at_tick=2 * i)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = (time.perf_counter() - t0) * 1e6
+        m = eng.metrics(done)
+        print(f"serve_paged_capacity_{tag},{dt:.1f},"
+              f"hbm_vs_contiguous={m['kv_hbm_vs_contiguous']};"
+              f"kv_blocks_hwm={m['kv_blocks_hwm']}/{m['kv_blocks']};"
+              f"prefix_hit_tokens={m['prefix_hit_tokens']};"
+              f"prefix_hit_rate={m['prefix_hit_rate']}")
 
 
 def bench_pallas_ag_gemm(W=4):
@@ -157,5 +195,7 @@ if __name__ == "__main__":
         bench_scaling()
     if which in ("all", "serving"):
         bench_serving_engine()
+    if which in ("all", "paged"):
+        bench_paged_capacity()
     if which in ("all", "pallas"):
         bench_pallas_ag_gemm()

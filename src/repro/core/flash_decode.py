@@ -263,6 +263,170 @@ def decode_attention_fused_sm(q, k_new, v_new, k_cache, v_cache, cur_len,
                                 check_vma=False)(*args)
 
 
+# --------------------------------------------------- paged (block-granular) KV
+#
+# The serving layer stores KV in a shared pool of fixed-size blocks,
+# (n_blocks, block_size, KVH, D), indexed through a per-slot block table
+# (B, max_blocks) of global block ids (-1 = unallocated). Logical
+# position p of slot b lives at pool block table[b, p // bs], offset
+# p % bs. Across the model axis the pool is sharded on the BLOCK dim in
+# contiguous chunks: global block t lives on rank t // n_loc at local
+# index t % n_loc. Softmax permutation-invariance makes any block->rank
+# assignment exact, and keeps every block write single-rank — the same
+# ownership-aware dataflow argument as the strided contiguous layout.
+
+def gather_paged_view(pool, tables):
+    """Materialize the logical per-slot view of a paged pool.
+
+    pool: (n_blocks, bs, KVH, D); tables: (B, C) int32 global block ids.
+    Returns (B, C*bs, KVH, D) in logical position order. Unallocated
+    chunks (-1) gather a clamped garbage block — callers mask by cur_len,
+    which never reaches into an unallocated chunk.
+    """
+    t = jnp.clip(tables, 0, pool.shape[0] - 1)
+    v = pool[t]                                  # (B, C, bs, KVH, D)
+    B, C, bs = v.shape[:3]
+    return v.reshape(B, C * bs, *pool.shape[2:])
+
+
+def paged_block_positions(tables, n_loc, rank, bs):
+    """Logical positions held by this rank's pool shard, per slot.
+
+    tables: (B, C); the local shard holds global blocks
+    [rank*n_loc, (rank+1)*n_loc). Returns (gpos (B, n_loc, bs) int32
+    logical positions, has (B, n_loc) bool — whether the local block is
+    referenced by the slot's table at all). Each global block appears at
+    most once per table row, so a masked max recovers its chunk index.
+    """
+    B, C = tables.shape
+    gb = rank * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
+    match = tables[:, :, None] == gb[None, None, :]        # (B, C, n_loc)
+    has = jnp.any(match, axis=1)
+    chunk = jnp.max(jnp.where(match, jnp.arange(C, dtype=jnp.int32)
+                              [None, :, None], 0), axis=1)  # (B, n_loc)
+    gpos = chunk[:, :, None] * bs + jnp.arange(bs, dtype=jnp.int32)
+    return gpos, has
+
+
+def paged_local_partial_attention(q, k_loc, v_loc, valid, scale):
+    """Partial attention over a local *pool* shard (no batch dim on KV:
+    blocks are shared across slots; ``valid`` carries each slot's view).
+    Delegates to :func:`local_partial_attention` with the shard broadcast
+    over the batch — a view, not a copy; the einsum folds it.
+
+    q: (B, H, D); k_loc/v_loc: (S_loc, KVH, D); valid: (B, S_loc) bool.
+    """
+    B = q.shape[0]
+    kb = jnp.broadcast_to(k_loc[None], (B,) + k_loc.shape)
+    vb = jnp.broadcast_to(v_loc[None], (B,) + v_loc.shape)
+    return local_partial_attention(q, kb, vb, valid, scale)
+
+
+def paged_write(pool, new, tables, cur_len, active, *, owner_base=None,
+                n_owned=None):
+    """Write each active slot's new KV at its current position through the
+    block table. pool: (n_loc, bs, KVH, D); new: (B, KVH, D). With
+    owner_base/n_owned set, only blocks [owner_base, owner_base+n_owned)
+    are local — writes outside the owned range (or to slots that are
+    inactive / unallocated) are routed out of bounds and dropped.
+    """
+    bs = pool.shape[1]
+    cl = jnp.asarray(cur_len)
+    pos = jnp.maximum(cl - 1, 0)
+    blk = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    ok = active & (blk >= 0)
+    if owner_base is not None:
+        ok = ok & (blk >= owner_base) & (blk < owner_base + n_owned)
+        blk = blk - owner_base
+    idx = jnp.where(ok, blk, pool.shape[0])          # OOB index -> dropped
+    return pool.at[idx, off].set(new.astype(pool.dtype), mode="drop")
+
+
+def decode_paged_attention_fused(q, k_new, v_new, k_pool, v_pool, cur_len,
+                                 tables, *, axis: str, scale: float,
+                                 mode: str = "ring",
+                                 window: int | None = None, active=None):
+    """Paged analogue of :func:`decode_attention_fused` (per-device body).
+
+    One shard_map region does block-table-translated cache write +
+    partial attention over the local block shard + cross-rank combine.
+    q: (B, H, D) replicated; k_new/v_new: (B, KVH, D); k_pool/v_pool:
+    (n_loc, bs, KVH, D) local block shard; tables: (B, C) replicated;
+    cur_len: (B,) per-slot lengths INCLUDING this step's token for
+    active slots. Returns (out, k_pool, v_pool).
+    """
+    W = jax_compat.axis_size(axis)
+    i = lax.axis_index(axis)
+    n_loc, bs = k_pool.shape[0], k_pool.shape[1]
+    B = q.shape[0]
+    cl = jnp.asarray(cur_len)
+    act = (jnp.ones((B,), bool) if active is None
+           else jnp.asarray(active))
+    base = i * n_loc
+    k_pool = paged_write(k_pool, k_new, tables, cl, act,
+                         owner_base=base, n_owned=n_loc)
+    v_pool = paged_write(v_pool, v_new, tables, cl, act,
+                         owner_base=base, n_owned=n_loc)
+
+    gpos, has = paged_block_positions(tables, n_loc, i, bs)
+    valid = has[:, :, None] & (gpos < cl[:, None, None])
+    if window is not None:
+        valid = valid & (gpos >= cl[:, None, None] - window)
+    valid = valid.reshape(B, n_loc * bs)
+    partial = paged_local_partial_attention(
+        q, k_pool.reshape(n_loc * bs, *k_pool.shape[2:]),
+        v_pool.reshape(n_loc * bs, *v_pool.shape[2:]), valid, scale)
+    if W == 1:
+        acc = partial
+    elif mode == "bsp":
+        acc = combine_bsp(partial, axis=axis)
+    elif mode == "ring":
+        acc = combine_ring(partial, axis=axis)
+    elif mode == "rs_ag":
+        acc = combine_rs_ag(partial, axis=axis)
+    else:
+        raise ValueError(f"unknown decode combine mode {mode!r}")
+    return finalize(acc).astype(q.dtype), k_pool, v_pool
+
+
+def decode_paged_attention_fused_sm(q, k_new, v_new, k_pool, v_pool, cur_len,
+                                    tables, mesh, *, axis="model",
+                                    scale: float, mode: str = "ring",
+                                    window: int | None = None, active=None):
+    """shard_map wrapper: pool sharded on the block dim (contiguous
+    chunks), everything else replicated. n_blocks must divide by the
+    axis size (the serving pool rounds up at construction)."""
+    pool_spec = P(axis, None, None, None)
+
+    def fn(q, k_new, v_new, kp, vp, cl, tb, *act):
+        return decode_paged_attention_fused(
+            q, k_new, v_new, kp, vp, cl, tb, axis=axis, scale=scale,
+            mode=mode, window=window, active=act[0] if act else None)
+
+    args = [q, k_new, v_new, k_pool, v_pool, cur_len, tables]
+    ins = [P(), P(), P(), pool_spec, pool_spec, P(), P()]
+    if active is not None:
+        args.append(active)
+        ins.append(P())
+    outs = (P(), pool_spec, pool_spec)
+    return jax_compat.shard_map(fn, mesh=mesh, in_specs=tuple(ins),
+                                out_specs=outs, axis_names={axis},
+                                check_vma=False)(*args)
+
+
+def reference_paged_decode_attention(q, k_pool, v_pool, cur_len, tables,
+                                     scale, window: int | None = None):
+    """Single-device paged oracle: gather the logical view, then dense
+    attention. Bit-identical to the contiguous reference for equal
+    logical capacity — gathered garbage beyond cur_len is masked with
+    exactly the same NEG_INF scores."""
+    kview = gather_paged_view(k_pool, tables)
+    vview = gather_paged_view(v_pool, tables)
+    return reference_decode_attention(q, kview, vview, cur_len, scale,
+                                      window=window)
+
+
 # ------------------------------------------------------- reference (1 device)
 def reference_decode_attention(q, k, v, cur_len, scale,
                                window: int | None = None):

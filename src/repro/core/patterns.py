@@ -121,3 +121,20 @@ def decode_attn_fused(q, k_new, v_new, k_cache, v_cache, cur_len, *, scale,
     return fd.decode_attention_fused_sm(
         q, k_new, v_new, k_cache, v_cache, cur_len, ctx.mesh, scale=scale,
         mode=combine, window=window, rolling_len=rolling_len, active=active)
+
+
+def decode_attn_paged(q, k_new, v_new, k_pool, v_pool, cur_len,
+                      block_tables, *, scale, window: int | None = None,
+                      active=None):
+    """Paged flash decode: block-table-translated cache write + partial
+    attention over the block-sharded pool + combine, in ONE shard_map
+    region (all fusion modes share the region; they differ in the
+    combine schedule — bsp keeps the paper's blocking all-gather).
+    Returns (out, k_pool, v_pool)."""
+    ctx = dctx.current()
+    mode = _mode(ctx)
+    combine = {"ring": "ring", "pallas": "ring", "rs_ag": "rs_ag",
+               "auto": "rs_ag", "bsp": "bsp"}[mode]
+    return fd.decode_paged_attention_fused_sm(
+        q, k_new, v_new, k_pool, v_pool, cur_len, block_tables, ctx.mesh,
+        scale=scale, mode=combine, window=window, active=active)

@@ -143,6 +143,171 @@ def _fd_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
                       ).astype(out_ref.dtype)
 
 
+def _fd_paged_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, out_ref,
+                     inbox, kbuf, vbuf, part, fetch_sem, send_sem, recv_sems,
+                     local_sem,
+                     *, axis: str, W: int, scale: float,
+                     use_barrier: bool = True):
+    """Paged variant of ``_fd_kernel``: the local KV shard is a slice of
+    the BLOCK POOL — (n_loc, block_size, KVH, D), global block
+    ``i*n_loc + j`` at local index j — and per-slot block tables
+    (scalar-prefetched) translate each streamed block back to its
+    logical positions. Streaming granularity is one pool block; the
+    online-softmax partials and the remote-DMA push/combine halves are
+    identical to the contiguous kernel."""
+    i = lax.axis_index(axis)
+    B, H, D = q_ref.shape
+    n_loc, bs, KVH = k_ref.shape[0], k_ref.shape[1], k_ref.shape[2]
+    C = tbl_ref.shape[1]
+    g = H // KVH
+
+    if use_barrier:
+        @pl.when(W > 1)
+        def _barrier():
+            barrier = pltpu.get_barrier_semaphore()
+            for d in range(W):
+                if d != 0:
+                    pltpu.semaphore_signal(
+                        barrier, inc=1,
+                        device_id=jax_compat.pallas_device_id(
+                            lax.rem(i + d, W)),
+                        device_id_type=pltpu.DeviceIdType.MESH)
+            pltpu.semaphore_wait(barrier, W - 1)
+
+    # -------- Part 1: block-table-translated local attention ---------------
+    for b in range(B):
+        cur_len = len_ref[b]
+        for h in range(KVH):
+            q_h = q_ref[b, pl.ds(h * g, g), :].astype(jnp.float32)  # (g, D)
+
+            def body(j, carry):
+                m, l, acc = carry
+                fk = pltpu.make_async_copy(
+                    k_ref.at[j, :, h, :], kbuf, fetch_sem)
+                fk.start()
+                fk.wait()
+                fv = pltpu.make_async_copy(
+                    v_ref.at[j, :, h, :], vbuf, fetch_sem)
+                fv.start()
+                fv.wait()
+                # logical chunk of global block i*n_loc + j in slot b's
+                # table (a block appears at most once per table row)
+                gb = i * n_loc + j
+                chunk = jnp.int32(0)
+                has = gb < 0          # False, traced
+                for c in range(C):
+                    hit = tbl_ref[b, c] == gb
+                    chunk = jnp.where(hit, jnp.int32(c), chunk)
+                    has = has | hit
+                gpos = chunk * bs + lax.iota(jnp.int32, bs)
+                valid = has & (gpos < cur_len)
+                s = (q_h @ kbuf[...].astype(jnp.float32).T) * scale
+                s = jnp.where(valid[None, :], s, NEG)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                m_safe = jnp.where(m_new <= NEG / 2, 0.0, m_new)
+                p = jnp.where(valid[None, :],
+                              jnp.exp(s - m_safe[:, None]), 0.0)
+                corr = jnp.where(m <= NEG / 2, 0.0,
+                                 jnp.exp(m - m_safe))
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = (acc * corr[:, None]
+                           + p @ vbuf[...].astype(jnp.float32))
+                return m_new, l_new, acc_new
+
+            m0 = jnp.full((g,), NEG, jnp.float32)
+            l0 = jnp.zeros((g,), jnp.float32)
+            a0 = jnp.zeros((g, D), jnp.float32)
+            m, l, acc = lax.fori_loop(0, n_loc, body, (m0, l0, a0))
+            part[b, pl.ds(h * g, g), pl.ds(0, D)] = acc
+            part[b, pl.ds(h * g, g), D] = m
+            part[b, pl.ds(h * g, g), D + 1] = l
+
+    # -------- asynchronous push to every rank's inbox ----------------------
+    if W > 1:
+        for d in range(W):
+            dst = lax.rem(i + d, W)
+            push = pltpu.make_async_remote_copy(
+                src_ref=part, dst_ref=inbox.at[i],
+                send_sem=send_sem, recv_sem=recv_sems.at[i],
+                device_id=jax_compat.pallas_device_id(dst),
+                device_id_type=pltpu.DeviceIdType.MESH)
+            push.start()
+            push.wait_send()
+    else:
+        cp = pltpu.make_async_copy(part, inbox.at[0], local_sem)
+        cp.start()
+        cp.wait()
+
+    # -------- Part 2: concurrent global reduction --------------------------
+    for b in range(B):
+        acc_o = jnp.zeros((H, D), jnp.float32)
+        acc_m = jnp.full((H,), NEG, jnp.float32)
+        acc_l = jnp.zeros((H,), jnp.float32)
+        for src in range(W):
+            if W > 1 and b == 0:
+                pltpu.make_async_copy(inbox.at[src], inbox.at[src],
+                                      recv_sems.at[src]).wait()
+            o_s = inbox[src, b, :, pl.ds(0, D)]
+            m_s = inbox[src, b, :, D]
+            l_s = inbox[src, b, :, D + 1]
+            m_new = jnp.maximum(acc_m, m_s)
+            m_safe = jnp.where(m_new <= NEG / 2, 0.0, m_new)
+            ca = jnp.where(acc_m <= NEG / 2, 0.0, jnp.exp(acc_m - m_safe))
+            cb = jnp.where(m_s <= NEG / 2, 0.0, jnp.exp(m_s - m_safe))
+            acc_o = acc_o * ca[:, None] + o_s * cb[:, None]
+            acc_l = acc_l * ca + l_s * cb
+            acc_m = m_new
+        out_ref[b] = (acc_o / jnp.maximum(acc_l, 1e-30)[:, None]
+                      ).astype(out_ref.dtype)
+
+
+def flash_decode_paged_fused(q, k_pool, v_pool, cur_len, tables, *,
+                             axis: str, W: int, scale: float = 1.0,
+                             interpret=None, collective_id: int = 10):
+    """Per-device body (call under shard_map, manual over `axis`).
+
+    q: (B, H, D) replicated; k_pool/v_pool: (n_loc, block_size, KVH, D)
+    local slice of the paged block pool; cur_len: (B,) int32 per-slot
+    lengths; tables: (B, max_blocks) int32 global block ids.
+    Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bs = k_pool.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),    # q
+            pl.BlockSpec(memory_space=pltpu.ANY),     # k pool (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),     # v pool (HBM)
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        scratch_shapes=[
+            pltpu.VMEM((W, B, H, D + 2), jnp.float32),  # per-source inbox
+            pltpu.VMEM((bs, D), k_pool.dtype),          # K block
+            pltpu.VMEM((bs, D), v_pool.dtype),          # V block
+            pltpu.VMEM((B, H, D + 2), jnp.float32),     # my partial
+            pltpu.SemaphoreType.DMA,                    # kv fetch
+            pltpu.SemaphoreType.DMA,                    # send
+            pltpu.SemaphoreType.DMA((W,)),              # per-source recv
+            pltpu.SemaphoreType.DMA,                    # local (W==1)
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _fd_paged_kernel, axis=axis, W=W, scale=scale,
+            use_barrier=jax_compat.pallas_barrier_supported(interpret)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=jax_compat.pallas_interpret(interpret),
+        compiler_params=jax_compat.tpu_compiler_params(
+            collective_id=collective_id),
+    )(cur_len, tables, q, k_pool, v_pool)
+
+
 def flash_decode_fused(q, k_shard, v_shard, cur_len, *, axis: str, W: int,
                        blk: int = 128, scale: float = 1.0, interpret=None,
                        collective_id: int = 9):

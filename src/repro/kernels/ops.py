@@ -63,3 +63,22 @@ def flash_decode(q, k_cache, v_cache, cur_len, mesh, *, axis: str = "model",
     return jax_compat.shard_map(fn, mesh=mesh, in_specs=ins, out_specs=P(),
                                 axis_names={axis}, check_vma=False)(
         q, k_cache, v_cache, cl)
+
+
+def flash_decode_paged(q, k_pool, v_pool, cur_len, tables, mesh, *,
+                       axis: str = "model", scale: float = 1.0):
+    """Distributed paged flash decode, fused kernel. q: (B,H,D)
+    replicated; k_pool/v_pool: (n_blocks, block_size, KVH, D) with the
+    block dim sharded on `axis` (contiguous chunks — the serving pool's
+    layout contract); cur_len: (B,) per-slot lengths; tables:
+    (B, max_blocks) int32 block tables, replicated."""
+    W = mesh.shape[axis]
+    cl = jnp.asarray(cur_len, jnp.int32).reshape(-1)
+    tb = jnp.asarray(tables, jnp.int32)
+    fn = functools.partial(_fd.flash_decode_paged_fused, axis=axis, W=W,
+                           scale=scale)
+    ins = (P(), P(axis, None, None, None), P(axis, None, None, None),
+           P(), P())
+    return jax_compat.shard_map(fn, mesh=mesh, in_specs=ins, out_specs=P(),
+                                axis_names={axis}, check_vma=False)(
+        q, k_pool, v_pool, cl, tb)

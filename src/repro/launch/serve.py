@@ -39,6 +39,17 @@ def main(argv=None):
     p.add_argument("--tp", type=int, default=1)
     p.add_argument("--fusion-mode", default="auto",
                    choices=("auto", "bsp", "ring", "pallas"))
+    p.add_argument("--sampler", default="greedy",
+                   choices=("greedy", "temperature"))
+    p.add_argument("--temp", type=float, default=1.0,
+                   help="sampling temperature (temperature sampler)")
+    p.add_argument("--top-k", type=int, default=0,
+                   help="top-k truncation, 0 = full vocab")
+    p.add_argument("--block-size", type=int, default=16,
+                   help="paged-KV block granularity (tokens)")
+    p.add_argument("--kv-blocks", type=int, default=None,
+                   help="KV pool size in blocks (default: contiguous "
+                        "parity, batch*max_len worth)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--metrics-file", default=None)
     args = p.parse_args(argv)
@@ -64,7 +75,9 @@ def main(argv=None):
             print(f"[serve] restored step {manifest['step']}")
 
         eng = Engine(params, cfg, batch=args.batch, max_len=args.max_len,
-                     prefill_chunk=args.prefill_chunk)
+                     prefill_chunk=args.prefill_chunk,
+                     sampler=args.sampler, seed=args.seed,
+                     block_size=args.block_size, n_blocks=args.kv_blocks)
         rng = jax.random.PRNGKey(args.seed + 1)
         for i in range(args.requests):
             rng, k = jax.random.split(rng)
@@ -73,7 +86,8 @@ def main(argv=None):
             prompt = [int(t) for t in
                       jax.random.randint(k, (plen,), 1, cfg.vocab_size)]
             eng.submit(Request(rid=i, prompt=prompt,
-                               max_new_tokens=args.max_new),
+                               max_new_tokens=args.max_new,
+                               temp=args.temp, top_k=args.top_k),
                        at_tick=i * args.stagger)
         t0 = time.time()
         done = eng.run()

@@ -188,9 +188,12 @@ def apply_attn(params, x, cfg, *, positions=None, dense_threshold=2048):
 
 
 # --------------------------------------------------------------- decode step
-def decode_attn_step(params, x, cache, cur_len, cfg, active=None):
+def decode_attn_step(params, x, cache, cur_len, cfg, active=None,
+                     block_tables=None):
     """One-token decode. x: (B, 1, d); cache: dict(k, v) strided seq-sharded
-    (B, S_max, KVH, hd). Returns (out (B,1,d), new cache).
+    (B, S_max, KVH, hd), or — with ``block_tables`` — a paged pool
+    (n_blocks, block_size, KVH, hd) shared across slots. Returns
+    (out (B,1,d), new cache).
 
     ``cur_len`` may be a scalar (lockstep) or a (B,) per-slot length
     vector that already includes this step's token for active slots.
@@ -198,12 +201,19 @@ def decode_attn_step(params, x, cache, cur_len, cfg, active=None):
     inactive slots keep their cache byte-identical (the K/V write is a
     read-modify-write predicated on ``active``) and their length — this
     is what lets continuous batching run slots at different positions
-    and chunked prefill stop early for short prompts."""
+    and chunked prefill stop early for short prompts.
+
+    ``block_tables`` (B, max_blocks) int32 (paged serving): logical
+    position p of slot b lives at pool block ``block_tables[b, p//bs]``,
+    offset ``p % bs``. The write and the attention read both translate
+    through the table; slots grow block-at-a-time instead of owning a
+    contiguous max_len stripe. Sliding windows are applied as a validity
+    mask (no rolling reclaim — out-of-window blocks stay resident until
+    the slot frees; block-level reclaim is a scheduler concern)."""
     ctx = dctx.current()
     B = x.shape[0]
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     W = ctx.model_axis_size
-    S_max = cache["k"].shape[1]
 
     q = jnp.einsum("bod,dn->bon", x, params["wq"].astype(x.dtype))
     k = jnp.einsum("bod,dn->bon", x, params["wk"].astype(x.dtype))
@@ -217,6 +227,30 @@ def decode_attn_step(params, x, cache, cur_len, cfg, active=None):
     if cfg.rope_theta:
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
+
+    if block_tables is not None:
+        # ---------------- paged path: translate through the block table
+        from repro.core import flash_decode as fd
+        cl_b = cl if cl.ndim else jnp.broadcast_to(cl.reshape(1), (B,))
+        act = (jnp.ones((B,), bool) if active is None
+               else jnp.asarray(active))
+        scale = 1.0 / (hd ** 0.5)
+        if W > 1:
+            o, ck, cv = patterns.decode_attn_paged(
+                q[:, 0], k[:, 0], v[:, 0], cache["k"], cache["v"], cl_b,
+                block_tables, scale=scale, window=cfg.sliding_window,
+                active=act)
+        else:
+            ck = fd.paged_write(cache["k"], k[:, 0], block_tables, cl_b, act)
+            cv = fd.paged_write(cache["v"], v[:, 0], block_tables, cl_b, act)
+            o = fd.reference_paged_decode_attention(
+                q[:, 0], ck, cv, cl_b, block_tables, scale,
+                window=cfg.sliding_window)
+        o = o.reshape(B, 1, H * hd)
+        out = patterns.project_k_sharded(o, params["wo"])
+        return out, {"k": ck, "v": cv}
+
+    S_max = cache["k"].shape[1]
 
     # strided cache layout: global position p -> array index
     # (p % W) * (S_max // W) + p // W  (shard-local slot p // W on rank p % W)
@@ -279,3 +313,14 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
         max_len = min(max_len, cfg.sliding_window)
     return {"k": jnp.zeros((batch, max_len, KVH, hd), dtype),
             "v": jnp.zeros((batch, max_len, KVH, hd), dtype)}
+
+
+def init_paged_cache(cfg, n_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16):
+    """Paged KV pool: blocks are shared across slots (no batch dim) and
+    indexed through per-slot block tables. No sliding-window bounding
+    here — the window is a validity mask in the paged decode path, and
+    per-slot capacity is whatever the table covers."""
+    KVH, hd = cfg.n_kv_heads, cfg.hd
+    return {"k": jnp.zeros((n_blocks, block_size, KVH, hd), dtype),
+            "v": jnp.zeros((n_blocks, block_size, KVH, hd), dtype)}

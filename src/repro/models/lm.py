@@ -144,6 +144,35 @@ def init_decode_state(params, cfg, batch: int, max_len: int):
             "cur_len": jnp.zeros((batch,), jnp.int32)}
 
 
+def init_paged_decode_state(params, cfg, batch: int, n_blocks: int,
+                            block_size: int, max_blocks: int):
+    """Paged decode state: KV lives in a shared pool of
+    ``n_blocks`` x ``block_size`` blocks; ``block_tables`` (B, max_blocks)
+    maps each slot's logical chunks to pool blocks (-1 = unallocated) and
+    rides in the jitted state so every decode step translates positions
+    through it. The serving allocator (serving.kv_cache.CachePool) owns
+    the host-side table/refcount bookkeeping and mirrors the table in.
+    """
+    return {"caches": transformer.init_paged_caches(cfg, batch, n_blocks,
+                                                    block_size, cfg.dtype),
+            "cur_len": jnp.zeros((batch,), jnp.int32),
+            "block_tables": jnp.full((batch, max_blocks), -1, jnp.int32)}
+
+
+def set_slot_len(state, slot: int, n: int):
+    """Set one slot's position counter (paged admission: a prefix-cache
+    hit starts the slot mid-prompt, at the first non-reused token)."""
+    return {**state, "cur_len": state["cur_len"].at[slot].set(n)}
+
+
+def copy_cache_block(state, cfg, src, dst):
+    """Device half of copy-on-write: clone pool block src -> dst across
+    all layers' paged KV leaves."""
+    return {**state,
+            "caches": transformer.copy_paged_block(cfg, state["caches"],
+                                                   src, dst)}
+
+
 def reset_slot(state, slot: int):
     """Zero one batch slot's cache/state (continuous-batching admission).
     Every cache leaf has batch at dim 1 (stacked layers at dim 0) except
@@ -154,6 +183,25 @@ def reset_slot(state, slot: int):
         return x
     caches = jax.tree.map(zero_slot, state["caches"])
     return {"caches": caches,
+            "cur_len": state["cur_len"].at[slot].set(0)}
+
+
+def reset_slot_paged(state, cfg, slot: int):
+    """Paged admission reset: zero the slot's RECURRENT state only
+    (mamba/rwkv leaves, batch at dim 1). Paged KV blocks need no zeroing
+    — stale block contents sit beyond cur_len until overwritten, and the
+    validity mask hides them."""
+    def zero_slot(x):
+        if x.ndim >= 2:
+            return x.at[:, slot].set(0)
+        return x
+    caches = state["caches"]
+    if cfg.block == "mamba_hybrid":
+        caches = {"mamba": jax.tree.map(zero_slot, caches["mamba"]),
+                  "attn": caches["attn"]}
+    elif cfg.block == "rwkv":
+        caches = jax.tree.map(zero_slot, caches)
+    return {**state, "caches": caches,
             "cur_len": state["cur_len"].at[slot].set(0)}
 
 
@@ -183,11 +231,16 @@ def decode_step(params, token, state, cfg, active=None):
     x = constrain(x, ctx.rules, None, None, "embed").astype(cfg.dtype)
     if cfg.block == "rwkv":
         x = apply_norm(params["ln_in"], x, "layernorm")
+    bt = state.get("block_tables")
     x, caches = transformer.decode(params["backbone"], x, state["caches"],
-                                   cur_len, cfg, active=active)
+                                   cur_len, cfg, active=active,
+                                   block_tables=bt)
     x = apply_norm(params["ln_f"], x, cfg.norm)
     logits = logits_fn(params, x, cfg)
-    return logits, {"caches": caches, "cur_len": cur_len}
+    new_state = {"caches": caches, "cur_len": cur_len}
+    if bt is not None:
+        new_state["block_tables"] = bt
+    return logits, new_state
 
 
 def decode_chunk(params, tokens, counts, state, cfg):

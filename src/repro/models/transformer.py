@@ -182,6 +182,45 @@ def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     raise ValueError(cfg.block)
 
 
+def init_paged_caches(cfg, batch: int, n_blocks: int, block_size: int,
+                      dtype=jnp.bfloat16):
+    """Stacked per-layer decode state, paged variant: attention KV lives
+    in a shared block pool (layers, n_blocks, block_size, KVH, hd);
+    recurrent (mamba/rwkv) state is inherently per-slot and stays
+    (layers, batch, ...) — paging only applies to the KV axis."""
+    if cfg.block in ("attn_mlp", "attn_moe"):
+        one = attention.init_paged_cache(cfg, n_blocks, block_size, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)
+    if cfg.block == "mamba_hybrid":
+        every = cfg.attn_every or cfg.n_layers
+        n_groups = cfg.n_layers // every
+        m = mamba2.init_mamba_cache(cfg, batch, dtype)
+        mstack = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), m)
+        a = attention.init_paged_cache(cfg, n_blocks, block_size, dtype)
+        astack = jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (n_groups,) + t.shape).copy(), a)
+        return {"mamba": mstack, "attn": astack}
+    if cfg.block == "rwkv":
+        return init_caches(cfg, batch, 0, dtype)   # no KV cache to page
+    raise ValueError(cfg.block)
+
+
+def copy_paged_block(cfg, caches, src, dst):
+    """Copy pool block ``src`` to ``dst`` across every paged KV leaf (all
+    layers) — the device half of the serving layer's copy-on-write.
+    Recurrent state is untouched. src/dst may be traced scalars."""
+    def cp(leaf):
+        return leaf.at[:, dst].set(leaf[:, src])
+    if cfg.block in ("attn_mlp", "attn_moe"):
+        return jax.tree.map(cp, caches)
+    if cfg.block == "mamba_hybrid":
+        return {"mamba": caches["mamba"],
+                "attn": jax.tree.map(cp, caches["attn"])}
+    return caches
+
+
 def _sel_state(active, old, new):
     """Per-slot predicated state update: slots with active=False keep
     their old recurrent state (continuous batching / chunked prefill).
@@ -193,19 +232,23 @@ def _sel_state(active, old, new):
             active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), old, new)
 
 
-def decode(params, x, caches, cur_len, cfg, active=None):
+def decode(params, x, caches, cur_len, cfg, active=None, block_tables=None):
     """One-token step. x: (B, 1, d). Returns (x, new_caches).
 
     ``cur_len``: scalar or per-slot (B,) lengths INCLUDING this token
     for active slots. ``active`` (B,) bool: slots that consume a token
-    this step; inactive slots leave every cache/state leaf unchanged."""
+    this step; inactive slots leave every cache/state leaf unchanged.
+    ``block_tables`` (B, max_blocks) int32: paged KV — every attention
+    cache access translates logical position -> (block, offset) through
+    it (see attention.decode_attn_step)."""
     if cfg.block in ("attn_mlp", "attn_moe"):
         def body(x, inp):
             lp, cache = inp
             h = apply_norm(lp["ln1"], x, cfg.norm)
             y, new_cache = attention.decode_attn_step(lp["attn"], h, cache,
                                                       cur_len, cfg,
-                                                      active=active)
+                                                      active=active,
+                                                      block_tables=block_tables)
             x = x + y
             h = apply_norm(lp["ln2"], x, cfg.norm)
             if "moe" in lp:
@@ -256,7 +299,8 @@ def decode(params, x, caches, cur_len, cfg, active=None):
                 ngc = jax.tree.map(lambda *xs: jnp.stack(xs), *accs)
             h = apply_norm(shared["ln1"], x, cfg.norm)
             y, nac = attention.decode_attn_step(shared["attn"], h, ac,
-                                                cur_len, cfg, active=active)
+                                                cur_len, cfg, active=active,
+                                                block_tables=block_tables)
             x = x + y
             h = apply_norm(shared["ln2"], x, cfg.norm)
             x = x + mlp.apply_mlp_decode(shared["mlp"], h, cfg)

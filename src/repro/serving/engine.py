@@ -1,31 +1,40 @@
 """Continuous-batching serving engine: per-slot prefill + decode.
 
 The decode step is where the paper's Flash Decode lives: one jitted
-step runs the whole active batch against the sequence-sharded KV cache,
-with the partial-softmax combine executed by the configured fusion mode
-(bsp / ring / pallas).
+step runs the whole active batch against the block-sharded paged KV
+pool, with the partial-softmax combine executed by the configured
+fusion mode (bsp / ring / pallas).
 
-This is TRUE per-slot continuous batching: the jitted state carries a
-(B,) position vector (``repro.models.lm.init_decode_state``), so every
-slot advances independently. A request can be admitted into a freed
-slot at ANY tick — its prompt starts writing at position 0 while the
-neighbouring slots keep decoding at their own positions, with no KV
-aliasing between them.
+This is TRUE per-slot continuous batching over PAGED KV: the jitted
+state carries a (B,) position vector and a (B, max_blocks) block table
+(``repro.models.lm.init_paged_decode_state``), so every slot advances
+independently and grows its cache one block at a time instead of
+pinning a contiguous ``max_len`` stripe. A request can be admitted into
+a freed slot at ANY tick; if its prompt prefix is resident in the
+prefix cache, admission seeds the slot's table with the shared blocks
+and prefill starts at the first novel token.
 
 Scheduling per tick:
 
-1. admit queued requests (whose arrival tick has passed) into free
-   ``CachePool`` slots;
+1. admit queued requests (whose arrival tick has passed) while the pool
+   has a free slot AND enough blocks for the prompt + one generated
+   token (block-availability admission, FCFS);
 2. build a (B, C) token block: prefilling slots take their next
    ``min(C, remaining)`` prompt tokens (chunked batched prefill — one
    jitted call consumes the whole chunk via ``lm.decode_chunk``),
    decoding slots take their last sampled token (count 1), idle slots
-   count 0;
+   count 0. Counts are clamped to what the pool can actually back with
+   blocks this tick (allocating/copy-on-writing at chunk boundaries) —
+   a slot that cannot get a block stalls instead of corrupting memory;
 3. one jitted step; sample next tokens from each slot's last-consumed-
-   token logits; retire finished requests and free their slots.
+   token logits — greedy, or seeded per-request temperature/top-k
+   (``sampler="temperature"``); retire finished requests and free their
+   slots (private blocks return to the free list, registered prefix
+   blocks stay resident for future hits).
 
 Per-request metrics: TTFT (submit -> first generated token) and TPOT
-(mean inter-token time over the generated tokens).
+(mean inter-token time over the generated tokens); engine metrics add
+block occupancy and prefix-hit counters.
 """
 from __future__ import annotations
 
@@ -48,9 +57,12 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     arrival_tick: int = 0            # earliest tick it may be admitted
+    temp: float = 1.0                # per-request sampling temperature
+    top_k: int = 0                   # per-request top-k (0 = full vocab)
     out_tokens: list = dataclasses.field(default_factory=list)
     slot: int = -1
     consumed: int = 0                # prompt tokens written to the cache
+    reused_tokens: int = 0           # prompt tokens served by a prefix hit
     done: bool = False
     submitted_t: float = 0.0
     admitted_t: float = 0.0
@@ -68,23 +80,41 @@ class Request:
 
     @property
     def tpot_s(self) -> float:
-        """Mean time per output token after the first."""
+        """Mean time per output token after the first. 0.0 until the
+        request finishes — before ``finished_t`` is stamped there is no
+        meaningful interval to average."""
         n = len(self.out_tokens)
-        if n <= 1:
+        if n <= 1 or self.finished_t == 0.0:
             return 0.0
         return max(self.finished_t - self.first_token_t, 0.0) / (n - 1)
 
 
 class Engine:
-    """Continuous-batching scheduler over a ``CachePool``.
+    """Continuous-batching scheduler over a paged ``CachePool``.
 
     ``prefill_chunk`` — max prompt tokens a slot consumes per tick. 1
     degrades to token-at-a-time prefill; larger values amortize
     dispatch overhead and shorten TTFT under load.
+
+    ``sampler`` — "greedy" (PR-1-identical argmax) or "temperature"
+    (seeded per-request temperature/top-k via ``Request.temp`` /
+    ``Request.top_k``; a request with ``temp=0`` is greedy). The PRNG
+    stream is keyed on (seed, request id, token index), so a request's
+    sampled tokens are reproducible regardless of scheduling.
+
+    ``block_size`` / ``n_blocks`` — paged-KV granularity and pool size;
+    ``n_blocks=None`` defaults to contiguous parity (batch * max_len
+    worth). Size it below parity to serve mixed-length traffic in a
+    fraction of the HBM.
     """
 
     def __init__(self, params, cfg, *, batch: int = 8, max_len: int = 512,
-                 prefill_chunk: int = 8, sampler: str = "greedy"):
+                 prefill_chunk: int = 8, sampler: str = "greedy",
+                 seed: int = 0, block_size: int = 16,
+                 n_blocks: int | None = None):
+        if sampler not in ("greedy", "temperature"):
+            raise ValueError(f"unknown sampler {sampler!r}: "
+                             f"expected 'greedy' or 'temperature'")
         self.params = params
         self.cfg = cfg
         self.batch = batch
@@ -92,8 +122,10 @@ class Engine:
         self.prefill_chunk = max(1, int(prefill_chunk))
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}   # slot -> request
-        self.pool = CachePool(params, cfg, batch, max_len)
+        self.pool = CachePool(params, cfg, batch, max_len,
+                              block_size=block_size, n_blocks=n_blocks)
         self.sampler = sampler
+        self._base_key = jax.random.PRNGKey(seed)
         self.tick_count = 0
         self.dispatch_count = 0     # ticks that actually ran a jitted step
         # two jitted paths sharing the pool state: a 1-token step for
@@ -102,6 +134,7 @@ class Engine:
             lambda p, t, a, s: lm.decode_step(p, t, s, cfg, active=a))
         self._stepC = jax.jit(
             lambda p, t, c, s: lm.decode_chunk(p, t, c, s, cfg))
+        self._sample = jax.jit(sampler_lib.sample_batch)
 
     # ------------------------------------------------------------- queueing
     def submit(self, req: Request, at_tick: int | None = None):
@@ -114,6 +147,13 @@ class Engine:
                 f">= max_len {self.max_len} — the cache cannot hold the "
                 f"prompt plus one generated token; raise max_len or "
                 f"truncate the prompt")
+        if not self.pool.admissible(len(req.prompt)):
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} "
+                f"needs more KV blocks than the whole pool holds "
+                f"(n_blocks={self.pool.n_blocks}, block_size="
+                f"{self.pool.block_size}) — it could never be admitted; "
+                f"raise n_blocks")
         req.submitted_t = time.time()
         if at_tick is not None:
             req.arrival_tick = at_tick
@@ -122,7 +162,11 @@ class Engine:
     def _admit(self):
         """Admit every already-eligible request (FCFS among eligible:
         a future-arrival at the queue head must not head-of-line-block
-        requests behind it whose tick has come)."""
+        requests behind it whose tick has come). Admission is gated on
+        BLOCK availability, not just slot count: a request enters only
+        when the pool can cover its (non-reused) prompt plus one
+        generated token; when it cannot, admission stops — skipping
+        ahead would starve long prompts."""
         admitted = []
         pending = []
         while self.queue and self.pool.n_free:
@@ -130,8 +174,13 @@ class Engine:
             if req.arrival_tick > self.tick_count:
                 pending.append(req)
                 continue
-            slot = self.pool.alloc()
+            res = self.pool.alloc(req.prompt)
+            if res is None:                 # not enough blocks yet: FCFS
+                pending.append(req)
+                break
+            slot, reused = res
             req.slot = slot
+            req.consumed = req.reused_tokens = reused
             req.admitted_t = time.time()
             self.active[slot] = req
             admitted.append(req)
@@ -149,17 +198,33 @@ class Engine:
         C = self.prefill_chunk
         tok = np.zeros((self.batch, C), np.int32)
         cnt = np.zeros((self.batch,), np.int32)
+        emit = np.zeros((self.batch,), bool)
         for slot, req in self.active.items():
+            want = (min(C, len(req.prompt) - req.consumed)
+                    if req.prefilling else 1)
+            # clamp to what the pool can back with blocks this tick
+            # (allocates at chunk boundaries, copy-on-writes shared blocks)
+            n = self.pool.writable(slot, want)
+            if n == 0:
+                continue                    # stalled: no KV block free
             if req.prefilling:
-                n = min(C, len(req.prompt) - req.consumed)
                 tok[slot, :n] = req.prompt[req.consumed:req.consumed + n]
                 cnt[slot] = n
+                emit[slot] = req.consumed + n >= len(req.prompt)
             else:
                 tok[slot, 0] = (req.out_tokens[-1] if req.out_tokens
                                 else req.prompt[-1])
                 cnt[slot] = 1
+                emit[slot] = True
 
         cmax = int(cnt.max(initial=0))
+        if cmax == 0:
+            # every active slot stalled on block availability, and nothing
+            # can finish to free blocks — unresolvable without preemption
+            raise RuntimeError(
+                f"KV block pool exhausted with all active slots stalled: "
+                f"{self.pool!r}; raise n_blocks or lower concurrency")
+        self.pool.sync()
         self.dispatch_count += 1
         if cmax <= 1:
             logits, self.pool.state = self._step1(
@@ -176,7 +241,7 @@ class Engine:
             logits, self.pool.state = self._stepC(
                 self.params, jnp.asarray(tok[:, :cw]), jnp.asarray(cnt),
                 self.pool.state)
-        nxt = np.asarray(sampler_lib.greedy(logits))
+        nxt = self._next_tokens(logits, emit)
 
         finished = []
         now = time.time()
@@ -188,6 +253,9 @@ class Engine:
             cache_full = int(self.pool.lengths[slot]) + 1 >= self.max_len
             if req.prefilling:
                 req.consumed += n
+                # full prompt chunks just written become shareable
+                # prefix blocks for future admissions
+                self.pool.register_prompt_chunks(slot, req.prompt)
                 if req.prefilling and not cache_full:  # still mid-prompt
                     continue
             if not req.prefilling:
@@ -205,6 +273,30 @@ class Engine:
                 del self.active[slot]
                 self.pool.free(slot)
         return finished
+
+    def _next_tokens(self, logits, emit):
+        """Sample each emitting slot's next token. Greedy engines keep
+        the PR-1 argmax path byte-identical; temperature engines fold
+        (seed, rid, token index) into a per-slot key so outputs are
+        reproducible and independent of batch composition."""
+        if self.sampler == "greedy":
+            return np.asarray(sampler_lib.greedy(logits))
+        rids = np.zeros((self.batch,), np.int32)
+        steps = np.zeros((self.batch,), np.int32)
+        temps = np.zeros((self.batch,), np.float32)
+        topks = np.zeros((self.batch,), np.int32)
+        for slot, req in self.active.items():
+            if not emit[slot]:
+                continue
+            rids[slot] = req.rid
+            steps[slot] = len(req.out_tokens)
+            temps[slot] = req.temp
+            topks[slot] = req.top_k
+        return np.asarray(self._sample(logits, self._base_key,
+                                       jnp.asarray(rids),
+                                       jnp.asarray(steps),
+                                       jnp.asarray(temps),
+                                       jnp.asarray(topks)))
 
     def run(self, max_ticks: int = 10_000) -> list[Request]:
         """Run until all submitted requests finish (or max_ticks ticks
@@ -235,4 +327,5 @@ class Engine:
             "p50_ttft_s": round(mid(ttfts), 4),
             "max_ttft_s": round(ttfts[-1], 4) if ttfts else 0.0,
             "p50_tpot_s": round(mid(tpots), 4),
+            **self.pool.metrics(),
         }

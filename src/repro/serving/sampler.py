@@ -1,4 +1,11 @@
-"""Token samplers."""
+"""Token samplers.
+
+``greedy`` and ``temperature`` are the single-policy primitives;
+``sample_batch`` is what the engine's scheduler uses — one jitted call
+samples the whole batch with *per-slot* PRNG keys and per-slot
+``temp``/``top_k`` (a ``temp`` of 0 degrades that row to greedy), so
+heterogeneous requests share one dispatch.
+"""
 from __future__ import annotations
 
 import jax
@@ -11,8 +18,37 @@ def greedy(logits):
 
 
 def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
+    """logits: (B, 1, V) -> (B, 1) int32. ``top_k`` is clamped to the
+    vocab size (top_k >= V means no truncation, not an OOB index)."""
     lf = logits[:, -1].astype(jnp.float32) / max(temp, 1e-4)
     if top_k:
-        kth = jnp.sort(lf, axis=-1)[:, -top_k][:, None]
+        k = min(int(top_k), lf.shape[-1])
+        kth = jnp.sort(lf, axis=-1)[:, -k][:, None]
         lf = jnp.where(lf < kth, -jnp.inf, lf)
     return jax.random.categorical(key, lf, axis=-1)[:, None].astype(jnp.int32)
+
+
+def sample_batch(logits, key, rids, steps, temps, top_ks):
+    """Per-slot sampling in one call.
+
+    logits: (B, 1, V); key: base PRNG key; rids/steps: (B,) int32 —
+    each row's key is fold_in(fold_in(key, rid), step) IN-GRAPH, so a
+    request's stream depends only on (seed, request id, token index),
+    never on scheduling, and the host pays one dispatch per tick;
+    temps: (B,) fp32; top_ks: (B,) int32 (0 = no truncation; clamped to
+    V). Rows with temp <= 0 are greedy. Returns (B, 1) int32.
+    """
+    lf = logits[:, -1].astype(jnp.float32)
+    V = lf.shape[-1]
+
+    def one(row, rid, step, temp, k):
+        kk = jax.random.fold_in(jax.random.fold_in(key, rid), step)
+        scaled = row / jnp.maximum(temp, 1e-4)
+        k_eff = jnp.clip(jnp.where(k <= 0, V, k), 1, V)
+        kth = jnp.sort(scaled)[V - k_eff]
+        masked = jnp.where(scaled < kth, -jnp.inf, scaled)
+        samp = jax.random.categorical(kk, masked)
+        return jnp.where(temp <= 0.0, jnp.argmax(row), samp)
+
+    out = jax.vmap(one)(lf, rids, steps, temps, top_ks)
+    return out[:, None].astype(jnp.int32)
