@@ -1,17 +1,36 @@
 """Serve a small model through the continuous-batching engine (the
 decode path is the paper's Flash Decode workload).
 
-Demonstrates per-slot continuous batching over PAGED KV: requests
-arrive at staggered ticks with different prompt lengths, get admitted
-into freed slots mid-run, and grow their cache one block at a time from
-a shared pool sized well below the contiguous batch*max_len footprint.
-Most requests share a "system prompt" prefix — after the first one
-prefills it, the rest hit the prefix cache and skip re-prefilling those
-tokens entirely. Each request still decodes exactly what a solo run
-would produce.
+Demonstrates per-slot continuous batching over PAGED KV with a
+pluggable scheduling policy: requests arrive at staggered ticks with
+different prompt lengths, get admitted into freed slots mid-run, and
+grow their cache one block at a time from a shared pool sized well
+below the contiguous batch*max_len footprint. Most requests share a
+"system prompt" prefix — after the first one prefills it, the rest hit
+the prefix cache and skip re-prefilling those tokens entirely. Should
+traffic ever outgrow the undersized pool, the engine preempts instead
+of failing: a victim is evicted (its blocks freed, its generated
+tokens folded into its effective prompt) and later resumed via a
+prefix hit — each request still decodes exactly what a solo run would
+produce.
 
     PYTHONPATH=src python examples/serve_decode.py
+    PYTHONPATH=src python examples/serve_decode.py --scheduler priority
+    PYTHONPATH=src python examples/serve_decode.py --scheduler slo \\
+        --deadline-ms 200
+
+``--scheduler`` picks the admission/preemption policy:
+  fcfs      submission order (the regression-anchored default)
+  priority  higher ``Request.priority`` first, with aging so the
+            low-priority tail is never starved (this demo tags every
+            third request priority=5)
+  slo       earliest-deadline-first on each request's ``deadline_ms``
+            TTFT target; untagged requests run FIFO afterwards
+``--deadline-ms`` tags every third request with that TTFT target (the
+rest stay best-effort), so the slo policy has a mixed population to
+reorder.
 """
+import argparse
 import os
 import sys
 import time
@@ -26,13 +45,26 @@ from repro.serving.engine import Engine, Request
 
 
 def main():
+    p = argparse.ArgumentParser(
+        description="continuous-batching serve demo (paged KV + "
+                    "pluggable scheduler)")
+    p.add_argument("--scheduler", default="fcfs",
+                   choices=("fcfs", "priority", "slo"),
+                   help="admission/preemption policy (see module "
+                        "docstring)")
+    p.add_argument("--deadline-ms", type=float, default=250.0,
+                   help="TTFT target tagged onto every third request "
+                        "for the slo policy")
+    args = p.parse_args()
+
     cfg = smoke_config(get_config("llama3-8b"))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     # pool sized to ~38% of the contiguous stripes (24 blocks of 16 vs
     # 4 slots x 256 tokens): mixed-length traffic fits anyway, because
-    # short requests no longer pin max_len worth of HBM
+    # short requests no longer pin max_len worth of HBM — and when the
+    # mix does outgrow it, the scheduler preempts instead of failing
     eng = Engine(params, cfg, batch=4, max_len=256, prefill_chunk=8,
-                 block_size=16, n_blocks=24)
+                 block_size=16, n_blocks=24, scheduler=args.scheduler)
 
     rng = jax.random.PRNGKey(1)
     rng, ks = jax.random.split(rng)
@@ -46,7 +78,10 @@ def main():
                 jax.random.randint(k, (plen,), 1, cfg.vocab_size)]
         # most requests share the system prefix; a couple are cold
         prompt = tail if i % 5 == 4 else system + tail
-        r = Request(rid=i, prompt=prompt, max_new_tokens=8)
+        urgent = i % 3 == 2       # mixed population for priority / slo
+        r = Request(rid=i, prompt=prompt, max_new_tokens=8,
+                    priority=5 if urgent else 0,
+                    deadline_ms=args.deadline_ms if urgent else None)
         reqs.append(r)
         # staggered arrivals: a new request every other tick — later ones
         # land in slots freed by earlier ones, mid-decode for the rest
@@ -58,16 +93,19 @@ def main():
     tot_new = sum(len(r.out_tokens) for r in done)
     m = eng.metrics(done)
     print(f"served {len(done)} requests, {tot_new} tokens "
-          f"in {dt:.2f}s ({tot_new / dt:.1f} tok/s on CPU)")
+          f"in {dt:.2f}s ({tot_new / dt:.1f} tok/s on CPU) "
+          f"under the {m['scheduler']!r} scheduler")
     print(f"paged KV: {m['kv_blocks_hwm']}/{m['kv_blocks']} blocks at "
           f"high water ({m['kv_hbm_vs_contiguous']:.0%} of the contiguous "
           f"footprint allocated), prefix cache served "
           f"{m['prefix_hit_tokens']} prompt tokens "
           f"({m['prefix_hits']} hits, rate {m['prefix_hit_rate']:.0%})")
+    print(f"scheduling: {m['preemptions']} preemptions, "
+          f"p50/p99 TTFT {m['p50_ttft_s']}/{m['p99_ttft_s']}s")
     print(f"engine metrics: {m}")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
-        print(f"  req {r.rid}: reused {r.reused_tokens} prompt tokens "
-              f"-> {r.out_tokens}")
+        print(f"  req {r.rid}: reused {r.reused_tokens} prompt tokens, "
+              f"preempted {r.preemptions}x -> {r.out_tokens}")
 
 
 if __name__ == "__main__":

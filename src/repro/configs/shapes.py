@@ -1,8 +1,7 @@
 """The assigned (architecture × input-shape) grid and applicability."""
 from __future__ import annotations
 
-from repro.configs.base import (ALL_SHAPES, DECODE_32K, LONG_500K,
-                                PREFILL_32K, TRAIN_4K, ShapeConfig)
+from repro.configs.base import ALL_SHAPES, ShapeConfig
 
 ARCH_IDS = (
     "mistral-large-123b", "phi3-mini-3.8b", "glm4-9b", "llama3-8b",

@@ -19,9 +19,7 @@ degrades to a local einsum.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.core import collective_matmul as cm
 from repro.core import flash_decode as fd

@@ -26,7 +26,6 @@ import os
 import signal
 import threading
 import time
-from typing import Callable
 
 
 class PreemptionGuard:

@@ -23,15 +23,13 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ALL_SHAPES, get_config, get_shape
 from repro.configs.shapes import ARCH_IDS, applicable
 from repro.distributed import context as dctx
-from repro.distributed.sharding_rules import Rules, rules_for
+from repro.distributed.sharding_rules import rules_for
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_production_mesh
-from repro.models import lm
 from repro.optim import adamw
 from repro.roofline import analysis
 

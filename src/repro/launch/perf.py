@@ -18,7 +18,7 @@ Usage: python -m repro.launch.perf --cell mistral_decode   (or phi3/olmoe/all)
 import argparse
 import json
 
-from repro.launch.dryrun import extrapolate_cell, lower_cell
+from repro.launch.dryrun import extrapolate_cell
 
 PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                         "experiments", "perf")

@@ -19,6 +19,7 @@ from repro.distributed.sharding_rules import rules_for
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.serving.engine import Engine, Request
+from repro.serving.metrics import percentile
 
 
 def main(argv=None):
@@ -41,6 +42,15 @@ def main(argv=None):
                    choices=("auto", "bsp", "ring", "pallas"))
     p.add_argument("--sampler", default="greedy",
                    choices=("greedy", "temperature"))
+    p.add_argument("--scheduler", default="fcfs",
+                   choices=("fcfs", "priority", "slo"),
+                   help="admission/preemption policy: fcfs (submission "
+                        "order), priority (Request.priority with aging), "
+                        "slo (earliest-deadline-first on --deadline-ms)")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="per-request TTFT target tagged onto every "
+                        "request (the slo scheduler runs tagged requests "
+                        "earliest-deadline-first)")
     p.add_argument("--temp", type=float, default=1.0,
                    help="sampling temperature (temperature sampler)")
     p.add_argument("--top-k", type=int, default=0,
@@ -77,7 +87,8 @@ def main(argv=None):
         eng = Engine(params, cfg, batch=args.batch, max_len=args.max_len,
                      prefill_chunk=args.prefill_chunk,
                      sampler=args.sampler, seed=args.seed,
-                     block_size=args.block_size, n_blocks=args.kv_blocks)
+                     block_size=args.block_size, n_blocks=args.kv_blocks,
+                     scheduler=args.scheduler)
         rng = jax.random.PRNGKey(args.seed + 1)
         for i in range(args.requests):
             rng, k = jax.random.split(rng)
@@ -87,7 +98,8 @@ def main(argv=None):
                       jax.random.randint(k, (plen,), 1, cfg.vocab_size)]
             eng.submit(Request(rid=i, prompt=prompt,
                                max_new_tokens=args.max_new,
-                               temp=args.temp, top_k=args.top_k),
+                               temp=args.temp, top_k=args.top_k,
+                               deadline_ms=args.deadline_ms),
                        at_tick=i * args.stagger)
         t0 = time.time()
         done = eng.run()
@@ -97,7 +109,8 @@ def main(argv=None):
         stats = {"requests": len(done), "new_tokens": toks,
                  "wall_s": round(dt, 3),
                  "tok_per_s": round(toks / dt, 2),
-                 "p50_latency_s": round(sorted(lat)[len(lat) // 2], 3),
+                 "p50_latency_s": round(percentile(lat, 50), 3),
+                 "p99_latency_s": round(percentile(lat, 99), 3),
                  **eng.metrics(done)}
         print(f"[serve] {stats}")
         if args.metrics_file:

@@ -5,7 +5,6 @@ Shared by the real launchers (train.py / serve.py) and the dry-run
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -42,7 +41,6 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
 
 
 def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int):
-    caches = transformer.init_caches  # reuse the shape logic via eval_shape
     spec = jax.eval_shape(
         lambda: {"caches": transformer.init_caches(cfg, batch, max_len,
                                                    cfg.dtype),
@@ -102,7 +100,7 @@ def decode_state_shardings(cfg: ModelConfig, rules: Rules, state_specs):
             return NamedSharding(mesh, P(*spec))
         return NamedSharding(mesh, P())
     flat = jax.tree_util.tree_flatten_with_path(state_specs)
-    leaves = [one_path(p, l) for p, l in flat[0]]
+    leaves = [one_path(p, leaf) for p, leaf in flat[0]]
     return jax.tree_util.tree_unflatten(flat[1], leaves)
 
 

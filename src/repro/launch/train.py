@@ -13,12 +13,10 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_config, smoke_config
@@ -26,7 +24,7 @@ from repro.data.pipeline import SyntheticLM
 from repro.distributed import context as dctx
 from repro.distributed.fault_tolerance import (Heartbeat, PreemptionGuard,
                                                StragglerWatchdog)
-from repro.distributed.sharding_rules import Rules, rules_for
+from repro.distributed.sharding_rules import rules_for
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import lm

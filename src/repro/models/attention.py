@@ -15,9 +15,6 @@ bidirectional (hubert).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax import lax

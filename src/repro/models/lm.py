@@ -105,7 +105,6 @@ def forward(params, batch, cfg):
 # -------------------------------------------------------------------- loss
 def cross_entropy(logits, labels, mask=None, z_loss: float = 1e-4):
     """Streamed CE in fp32 with z-loss; labels -100 are ignored."""
-    V = logits.shape[-1]
     lf = logits.astype(jnp.float32)
     lse = jax.scipy.special.logsumexp(lf, axis=-1)
     gold = jnp.take_along_axis(
@@ -203,6 +202,17 @@ def reset_slot_paged(state, cfg, slot: int):
         caches = jax.tree.map(zero_slot, caches)
     return {**state, "caches": caches,
             "cur_len": state["cur_len"].at[slot].set(0)}
+
+
+def release_slot_paged(state, slot: int):
+    """Preemption reset: zero a slot's position counter the moment its
+    blocks are freed, not at the next admission. The slot sits inactive
+    in every jitted step until re-admission (the active mask freezes
+    it) and ``alloc()`` runs the full ``reset_slot_paged`` then — the
+    length is the only field that must not dangle meanwhile, because
+    the slot's table row goes to -1 immediately and a stale ``cur_len``
+    would point past blocks now owned by other slots."""
+    return set_slot_len(state, slot, 0)
 
 
 def decode_step(params, token, state, cfg, active=None):

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Mapping
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -97,7 +97,7 @@ def param_count(tree: PyTree) -> int:
         if hasattr(x, "shape"):
             return int(np.prod(x.shape)) if x.shape else 1
         return 0
-    return sum(_n(l) for l in jax.tree.leaves(tree, is_leaf=is_param))
+    return sum(_n(leaf) for leaf in jax.tree.leaves(tree, is_leaf=is_param))
 
 
 def param_bytes(tree: PyTree) -> int:
@@ -105,7 +105,7 @@ def param_bytes(tree: PyTree) -> int:
         shape = getattr(x, "shape", ())
         dtype = getattr(x, "dtype", jnp.float32)
         return int(np.prod(shape)) * jnp.dtype(dtype).itemsize if shape else 0
-    return sum(_b(l) for l in jax.tree.leaves(tree, is_leaf=is_param))
+    return sum(_b(leaf) for leaf in jax.tree.leaves(tree, is_leaf=is_param))
 
 
 def stack_layer_specs(spec: PyTree, n_layers: int, layer_axis: str = "layers"

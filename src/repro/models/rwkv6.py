@@ -35,7 +35,6 @@ CLAMP = 4.6  # per-step |log decay| bound
 
 def rwkv_spec(cfg):
     d = cfg.d_model
-    nh = d // HEAD
     lora = 64
     return {
         "ln_t": norm_spec(d, "layernorm"),

@@ -16,8 +16,6 @@ size.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
 
 from repro.roofline.hw import V5E, Chip

@@ -16,25 +16,66 @@ and prefill starts at the first novel token.
 
 Scheduling per tick:
 
-1. admit queued requests (whose arrival tick has passed) while the pool
-   has a free slot AND enough blocks for the prompt + one generated
-   token (block-availability admission, FCFS);
+1. admit queued requests (whose arrival tick has passed) in the order
+   the configured policy chooses, while the pool has a free slot AND
+   enough blocks for the prompt + one generated token
+   (block-availability admission); admission stops at the first
+   request the pool cannot back, so long prompts are never starved by
+   skip-ahead;
 2. build a (B, C) token block: prefilling slots take their next
    ``min(C, remaining)`` prompt tokens (chunked batched prefill — one
    jitted call consumes the whole chunk via ``lm.decode_chunk``),
    decoding slots take their last sampled token (count 1), idle slots
    count 0. Counts are clamped to what the pool can actually back with
    blocks this tick (allocating/copy-on-writing at chunk boundaries) —
-   a slot that cannot get a block stalls instead of corrupting memory;
+   a slot that cannot get a block stalls instead of corrupting memory.
+   If EVERY active slot stalls, the policy names a victim and the
+   engine preempts it instead of deadlocking (see below);
 3. one jitted step; sample next tokens from each slot's last-consumed-
    token logits — greedy, or seeded per-request temperature/top-k
    (``sampler="temperature"``); retire finished requests and free their
    slots (private blocks return to the free list, registered prefix
-   blocks stay resident for future hits).
+   blocks stay resident for future hits). Sliding-window archs also
+   reclaim each slot's dead blocks (positions rolled permanently out of
+   the window) so rolling workloads stop pinning memory.
+
+Scheduling POLICY is pluggable (``scheduler=`` — a name or a
+``repro.serving.scheduler.SchedulerPolicy`` instance; CLI flag
+``--scheduler`` on ``repro.launch.serve`` and
+``examples/serve_decode.py``):
+
+* ``fcfs``     (default) — submission order; admission decisions are
+  byte-identical to the pre-policy engine (regression-anchored: same
+  token streams, same tick/dispatch counts).
+* ``priority`` — per-request ``Request.priority`` (higher first) with
+  aging, so sustained high-priority traffic cannot starve the
+  low-priority tail forever.
+* ``slo``      — earliest-deadline-first on ``Request.deadline_ms``
+  (a TTFT target relative to submission; ``--deadline-ms``); untagged
+  requests run FIFO after every deadline-tagged one.
+
+The policy interface is three host-side hooks —
+``select_admissions(queue, pool, tick)``,
+``select_victim(active, pool)``, ``on_tick_end(queue, active, tick)``
+— documented in ``repro.serving.scheduler``.
+
+PREEMPTION replaces the old pool-exhaustion ``RuntimeError``: when all
+active slots stall on block availability, the victim's private blocks
+are freed (``CachePool.preempt`` — its fully-written chunks are first
+registered as prefix blocks, so resuming is a prefix hit that skips
+re-prefilling them) and the request re-queues with its generated tokens
+folded into an effective prompt. Decode logits depend only on the token
+history, so a preempted request's output stream is token-identical to
+an uninterrupted run — for greedy sampling and for the seeded
+temperature sampler, whose PRNG keys fold (seed, rid, token index) and
+therefore survive rescheduling. The engine still raises when preemption
+cannot make progress (a single request's history has outgrown the whole
+pool).
 
 Per-request metrics: TTFT (submit -> first generated token) and TPOT
 (mean inter-token time over the generated tokens); engine metrics add
-block occupancy and prefix-hit counters.
+p50/p99 latency tails, preemption/reclaim counters, and block
+occupancy + prefix-hit counters.
 """
 from __future__ import annotations
 
@@ -49,6 +90,8 @@ import numpy as np
 from repro.models import lm
 from repro.serving import sampler as sampler_lib
 from repro.serving.kv_cache import CachePool
+from repro.serving.metrics import latency_summary
+from repro.serving.scheduler import SchedulerPolicy, get_scheduler
 
 
 @dataclasses.dataclass
@@ -59,19 +102,30 @@ class Request:
     arrival_tick: int = 0            # earliest tick it may be admitted
     temp: float = 1.0                # per-request sampling temperature
     top_k: int = 0                   # per-request top-k (0 = full vocab)
+    priority: int = 0                # higher = sooner ("priority" policy)
+    deadline_ms: float | None = None  # TTFT target ("slo" policy)
     out_tokens: list = dataclasses.field(default_factory=list)
     slot: int = -1
-    consumed: int = 0                # prompt tokens written to the cache
+    consumed: int = 0                # effective-prompt tokens written
     reused_tokens: int = 0           # prompt tokens served by a prefix hit
+    preemptions: int = 0             # times evicted and re-queued
+    seq: int = 0                     # submission order (engine-stamped)
     done: bool = False
     submitted_t: float = 0.0
     admitted_t: float = 0.0
     first_token_t: float = 0.0
     finished_t: float = 0.0
 
+    def __post_init__(self):
+        # what a (re)admission actually prefills: the original prompt,
+        # plus — after a preemption — the tokens generated before
+        # eviction (decode logits depend only on the token history, so
+        # replaying prompt+generated resumes the stream exactly)
+        self.eff_prompt: list[int] = list(self.prompt)
+
     @property
     def prefilling(self) -> bool:
-        return self.consumed < len(self.prompt)
+        return self.consumed < len(self.eff_prompt)
 
     @property
     def ttft_s(self) -> float:
@@ -100,21 +154,30 @@ class Engine:
     (seeded per-request temperature/top-k via ``Request.temp`` /
     ``Request.top_k``; a request with ``temp=0`` is greedy). The PRNG
     stream is keyed on (seed, request id, token index), so a request's
-    sampled tokens are reproducible regardless of scheduling.
+    sampled tokens are reproducible regardless of scheduling — and
+    survive preemption.
+
+    ``scheduler`` — admission/preemption policy: "fcfs" (default,
+    regression-anchored), "priority", "slo", or a
+    ``repro.serving.scheduler.SchedulerPolicy`` instance (e.g.
+    ``PriorityScheduler(aging_ticks=8)``).
 
     ``block_size`` / ``n_blocks`` — paged-KV granularity and pool size;
     ``n_blocks=None`` defaults to contiguous parity (batch * max_len
     worth). Size it below parity to serve mixed-length traffic in a
-    fraction of the HBM.
+    fraction of the HBM; exhaustion under oversubscription preempts
+    instead of failing.
     """
 
     def __init__(self, params, cfg, *, batch: int = 8, max_len: int = 512,
                  prefill_chunk: int = 8, sampler: str = "greedy",
                  seed: int = 0, block_size: int = 16,
-                 n_blocks: int | None = None):
+                 n_blocks: int | None = None,
+                 scheduler: str | SchedulerPolicy = "fcfs"):
         if sampler not in ("greedy", "temperature"):
             raise ValueError(f"unknown sampler {sampler!r}: "
                              f"expected 'greedy' or 'temperature'")
+        self.policy = get_scheduler(scheduler)   # fail fast, pre-pool-init
         self.params = params
         self.cfg = cfg
         self.batch = batch
@@ -128,6 +191,8 @@ class Engine:
         self._base_key = jax.random.PRNGKey(seed)
         self.tick_count = 0
         self.dispatch_count = 0     # ticks that actually ran a jitted step
+        self.preempt_count = 0      # victims evicted on pool exhaustion
+        self._seq = 0               # submission order stamp
         # two jitted paths sharing the pool state: a 1-token step for
         # all-decoding ticks, a C-token scan when any slot is prefilling
         self._step1 = jax.jit(
@@ -141,6 +206,11 @@ class Engine:
         """Queue a request. ``at_tick`` (or ``req.arrival_tick``) delays
         admission until that scheduler tick — this is how staggered
         arrivals are expressed in tests/benchmarks."""
+        if not req.prompt:
+            raise ValueError(
+                f"request {req.rid}: empty prompt — a request must carry "
+                f"at least one token to produce logits; reject it at the "
+                f"API edge or seed it with a BOS token")
         if len(req.prompt) >= self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.prompt)} "
@@ -155,42 +225,84 @@ class Engine:
                 f"{self.pool.block_size}) — it could never be admitted; "
                 f"raise n_blocks")
         req.submitted_t = time.time()
+        req.seq = self._seq
+        self._seq += 1
         if at_tick is not None:
             req.arrival_tick = at_tick
         self.queue.append(req)
 
     def _admit(self):
-        """Admit every already-eligible request (FCFS among eligible:
-        a future-arrival at the queue head must not head-of-line-block
-        requests behind it whose tick has come). Admission is gated on
-        BLOCK availability, not just slot count: a request enters only
-        when the pool can cover its (non-reused) prompt plus one
-        generated token; when it cannot, admission stops — skipping
-        ahead would starve long prompts."""
+        """Admit eligible requests in policy order. Admission is gated
+        on BLOCK availability, not just slot count: a request enters
+        only when the pool can cover its (non-reused) effective prompt
+        plus one generated token; the first request the pool cannot
+        back stops admission for the tick — skipping ahead within the
+        policy's order would starve long prompts."""
         admitted = []
-        pending = []
-        while self.queue and self.pool.n_free:
-            req = self.queue.popleft()
-            if req.arrival_tick > self.tick_count:
-                pending.append(req)
-                continue
-            res = self.pool.alloc(req.prompt)
-            if res is None:                 # not enough blocks yet: FCFS
-                pending.append(req)
+        if not self.queue:
+            return admitted
+        eligible = [r for r in self.queue
+                    if r.arrival_tick <= self.tick_count]
+        if not eligible:
+            return admitted
+        taken = set()
+        for req in self.policy.select_admissions(eligible, self.pool,
+                                                 self.tick_count):
+            if not self.pool.n_free:
+                break
+            res = self.pool.alloc(req.eff_prompt)
+            if res is None:                 # not enough blocks yet
                 break
             slot, reused = res
             req.slot = slot
             req.consumed = req.reused_tokens = reused
             req.admitted_t = time.time()
             self.active[slot] = req
+            taken.add(id(req))
             admitted.append(req)
-        for req in reversed(pending):
-            self.queue.appendleft(req)
+        if taken:
+            self.queue = deque(r for r in self.queue
+                               if id(r) not in taken)
         return admitted
+
+    def _preempt_one(self):
+        """Every active slot is stalled on block availability and
+        nothing can finish to free blocks: evict the policy's victim.
+        Its effective prompt absorbs the tokens generated so far, its
+        fully-written chunks re-register as prefix blocks (resume is a
+        prefix hit), its private blocks return to the pool, and it goes
+        back to the queue head. Raises only when the victim's history
+        has outgrown the whole pool — no schedule can finish it."""
+        victim = self.policy.select_victim(self.active, self.pool)
+        victim.eff_prompt = list(victim.prompt) + list(victim.out_tokens)
+        if not self.pool.admissible(len(victim.eff_prompt)):
+            raise RuntimeError(
+                f"KV block pool exhausted and request {victim.rid} has "
+                f"grown past what the whole pool can hold (effective "
+                f"prompt {len(victim.eff_prompt)} tokens, n_blocks="
+                f"{self.pool.n_blocks}, block_size="
+                f"{self.pool.block_size}): preemption cannot make "
+                f"progress; raise n_blocks or lower max_new_tokens")
+        slot = victim.slot
+        self.pool.preempt(slot, victim.eff_prompt)
+        del self.active[slot]
+        victim.slot = -1
+        victim.consumed = 0
+        victim.reused_tokens = 0
+        victim.preemptions += 1
+        self.preempt_count += 1
+        # queue head: the victim is in-flight work — every policy gets
+        # first say on it again next tick via select_admissions
+        self.queue.appendleft(victim)
 
     # ----------------------------------------------------------- scheduling
     def tick(self) -> list[Request]:
         """One scheduler step. Returns requests that finished this tick."""
+        finished = self._tick()
+        self.policy.on_tick_end(self.queue, self.active, self.tick_count)
+        return finished
+
+    def _tick(self) -> list[Request]:
         self._admit()
         self.tick_count += 1
         if not self.active:
@@ -200,7 +312,7 @@ class Engine:
         cnt = np.zeros((self.batch,), np.int32)
         emit = np.zeros((self.batch,), bool)
         for slot, req in self.active.items():
-            want = (min(C, len(req.prompt) - req.consumed)
+            want = (min(C, len(req.eff_prompt) - req.consumed)
                     if req.prefilling else 1)
             # clamp to what the pool can back with blocks this tick
             # (allocates at chunk boundaries, copy-on-writes shared blocks)
@@ -208,22 +320,22 @@ class Engine:
             if n == 0:
                 continue                    # stalled: no KV block free
             if req.prefilling:
-                tok[slot, :n] = req.prompt[req.consumed:req.consumed + n]
+                tok[slot, :n] = req.eff_prompt[req.consumed:req.consumed + n]
                 cnt[slot] = n
-                emit[slot] = req.consumed + n >= len(req.prompt)
+                emit[slot] = req.consumed + n >= len(req.eff_prompt)
             else:
                 tok[slot, 0] = (req.out_tokens[-1] if req.out_tokens
-                                else req.prompt[-1])
+                                else req.eff_prompt[-1])
                 cnt[slot] = 1
                 emit[slot] = True
 
         cmax = int(cnt.max(initial=0))
         if cmax == 0:
-            # every active slot stalled on block availability, and nothing
-            # can finish to free blocks — unresolvable without preemption
-            raise RuntimeError(
-                f"KV block pool exhausted with all active slots stalled: "
-                f"{self.pool!r}; raise n_blocks or lower concurrency")
+            # every active slot stalled and nothing can finish to free
+            # blocks — preempt a victim instead of deadlocking; its
+            # blocks unblock the survivors next tick
+            self._preempt_one()
+            return []
         self.pool.sync()
         self.dispatch_count += 1
         if cmax <= 1:
@@ -254,10 +366,16 @@ class Engine:
             if req.prefilling:
                 req.consumed += n
                 # full prompt chunks just written become shareable
-                # prefix blocks for future admissions
-                self.pool.register_prompt_chunks(slot, req.prompt)
-                if req.prefilling and not cache_full:  # still mid-prompt
-                    continue
+                # prefix blocks for future admissions (and for resuming
+                # this request if it is ever preempted)
+                self.pool.register_prompt_chunks(slot, req.eff_prompt)
+            if self.cfg.sliding_window is not None:
+                # block-level reclaim: positions that rolled permanently
+                # out of the window stop pinning their blocks
+                self.pool.reclaim_out_of_window(slot,
+                                                self.cfg.sliding_window)
+            if req.prefilling and not cache_full:   # still mid-prompt
+                continue
             if not req.prefilling:
                 # the logits after this slot's last consumed token give
                 # the next output token (the first one arrives on the
@@ -314,18 +432,16 @@ class Engine:
         toks = sum(len(r.out_tokens) for r in done)
         # zero-output requests never produced a first token: excluding
         # them keeps the TTFT percentiles honest
-        ttfts = sorted(r.ttft_s for r in done if r.out_tokens)
-        tpots = sorted(r.tpot_s for r in done if len(r.out_tokens) > 1)
-
-        def mid(xs):
-            return xs[len(xs) // 2] if xs else 0.0
+        ttfts = [r.ttft_s for r in done if r.out_tokens]
+        tpots = [r.tpot_s for r in done if len(r.out_tokens) > 1]
         return {
             "requests": len(done),
             "new_tokens": toks,
             "ticks": self.tick_count,
             "dispatches": self.dispatch_count,
-            "p50_ttft_s": round(mid(ttfts), 4),
-            "max_ttft_s": round(ttfts[-1], 4) if ttfts else 0.0,
-            "p50_tpot_s": round(mid(tpots), 4),
+            "scheduler": self.policy.name,
+            "preemptions": self.preempt_count,
+            **latency_summary(ttfts, "ttft"),
+            **latency_summary(tpots, "tpot"),
             **self.pool.metrics(),
         }

@@ -38,6 +38,24 @@ block bookkeeping:
   final shared block), the block is first cloned to a private copy
   (``lm.copy_cache_block``) and the table repointed.
 
+* **preemption** — ``preempt(slot)`` expresses eviction as block
+  bookkeeping: the victim's fully-written prompt chunks are registered
+  as prefix blocks first (so a resume is a prefix hit that skips
+  re-prefilling them), then every block reference is dropped — private
+  blocks return to the free list immediately, shared/registered ones
+  stay resident. The engine re-queues the victim with its generated
+  tokens folded into an effective prompt.
+* **sliding-window reclaim** — ``reclaim_out_of_window(slot, window)``
+  frees a slot's blocks whose every position has rolled permanently out
+  of the attention window (the mask is ``pos >= cur_len - window`` and
+  ``cur_len`` only grows), leaving ``-1`` holes in the table. The paged
+  attention paths treat ``-1`` as invalid (masked), so a hole is never
+  read; rolling workloads stop pinning dead blocks.
+
+A slot's table is dense from 0 *except* for reclaim holes; ``free()``
+and ``register_prompt_chunks`` therefore scan past ``-1`` entries
+rather than treating the first one as end-of-table.
+
 The host mirrors (``tables``, ``lengths``, ``active``) let the scheduler
 make admission/growth decisions without a device sync; ``sync()``
 re-uploads the table to the jitted state only when it changed.
@@ -122,6 +140,8 @@ class CachePool:
         self.evictions = 0
         self.admitted = 0
         self.blocks_hwm = 0
+        self.preempted_slots = 0
+        self.blocks_reclaimed = 0      # sliding-window dead-block frees
 
     # ----------------------------------------------------------- block layer
     def _pop_block(self) -> int | None:
@@ -232,6 +252,8 @@ class CachePool:
         parent = -1
         for c in range(n_full):
             b = int(self.tables[slot, c])
+            if b < 0:
+                break    # window-reclaim hole: the chain is unreachable
             if b in self._key_of:
                 parent = b
                 continue
@@ -340,16 +362,64 @@ class CachePool:
     def free(self, slot: int):
         """Release the slot. Its private blocks return to the free list;
         registered prefix blocks it referenced stay resident (LRU) for
-        future prefix hits."""
-        for c in range(self.max_blocks):
+        future prefix hits. Scans the whole table row: window reclaim
+        leaves -1 holes with live chunks beyond them. Chunks deref in
+        REVERSE order so registered blocks enter the resident LRU
+        deepest-first — eviction then consumes chain leaves before
+        chain roots, and a partially-evicted prefix keeps its matchable
+        head (a child without its parent is unreachable anyway)."""
+        for c in reversed(range(self.max_blocks)):
             b = int(self.tables[slot, c])
             if b < 0:
-                break              # chunks are allocated densely from 0
+                continue
             self._deref(b)
         self.tables[slot] = -1
         self.active[slot] = False
         self.lengths[slot] = 0
         self._dirty = True
+
+    def preempt(self, slot: int, tokens=None):
+        """Evict the slot so its blocks can back other requests.
+
+        ``tokens`` — the victim's effective token history (prompt plus
+        generated tokens). Its fully-written chunks are registered as
+        prefix blocks BEFORE the references drop, so they land in the
+        resident LRU instead of vanishing: the resumed request gets a
+        prefix hit and re-prefills only the final partial block and the
+        last token. (Under pool pressure the resident blocks are
+        ordinary eviction supply — preemption never pins memory.) The
+        device-side position is cleared immediately
+        (``lm.release_slot_paged``) so the jitted state never carries a
+        stale length into the slot's inactive period."""
+        if tokens is not None:
+            self.register_prompt_chunks(slot, tokens)
+        self.free(slot)
+        self.state = lm.release_slot_paged(self.state, slot)
+        self.preempted_slots += 1
+
+    def reclaim_out_of_window(self, slot: int, window: int) -> int:
+        """Free the slot's blocks that have rolled out of the attention
+        window for good. Every decode path masks with
+        ``pos >= cur_len - window`` and ``cur_len`` only grows, so a
+        block whose last position is below ``lengths - window`` can
+        never be attended again. Freed chunks leave ``-1`` holes (the
+        paged gather/ownership paths treat -1 as invalid, so a hole is
+        masked, never read). Returns the number of blocks freed."""
+        if not self._needs_blocks:
+            return 0
+        dead_chunks = (int(self.lengths[slot]) - window) // self.block_size
+        freed = 0
+        for c in range(min(dead_chunks, self.max_blocks)):
+            b = int(self.tables[slot, c])
+            if b < 0:
+                continue
+            self._deref(b)
+            self.tables[slot, c] = -1
+            freed += 1
+        if freed:
+            self.blocks_reclaimed += freed
+            self._dirty = True
+        return freed
 
     def advance(self, slot: int, n: int):
         """Record that `slot` consumed n tokens this tick (host mirror;
@@ -391,4 +461,5 @@ class CachePool:
                                      / max(self.admitted, 1), 4),
             "cow_copies": self.cow_copies,
             "block_evictions": self.evictions,
+            "kv_blocks_reclaimed": self.blocks_reclaimed,
         }

@@ -186,8 +186,8 @@ def check_fusion_mode_equivalence():
                 params, batch)
             losses[mode] = float(loss)
     base = losses["bsp"]
-    for mode, l in losses.items():
-        assert abs(l - base) < 5e-3, f"{mode} loss {l} != bsp {base}"
+    for mode, loss in losses.items():
+        assert abs(loss - base) < 5e-3, f"{mode} loss {loss} != bsp {base}"
 
 
 def check_sharded_train_step():
@@ -317,10 +317,6 @@ def check_fused_decode_rolling():
     v_roll = v.at[:, p].set(v_new)
     want = fd.reference_decode_attention(q, k_roll, v_roll, jnp.int32(S),
                                          0.25)
-    k_sh = jax.device_put(_strided(k_roll, W),
-                          NamedSharding(mesh, P(None, "model", None, None)))
-    v_sh = jax.device_put(_strided(v_roll, W),
-                          NamedSharding(mesh, P(None, "model", None, None)))
     # fused path writes k_new itself; pass the PRE-update cache
     k_pre = jax.device_put(_strided(k, W),
                            NamedSharding(mesh, P(None, "model", None, None)))
@@ -505,6 +501,47 @@ def check_engine_paged_prefix_sharing():
         for r in done:
             want = reference_generate(params, cfg, r.prompt, 4, 64)
             assert r.out_tokens == want, (r.rid, r.out_tokens, want)
+
+
+def check_engine_preemption_token_identity():
+    """Block-level preemption under both fusion modes: a KV pool too
+    small for the combined decode growth forces every slot to stall —
+    the engine must preempt a victim (free its private blocks, fold its
+    generated tokens into an effective prompt, re-queue) instead of
+    raising, and every request must still decode token-for-token what a
+    solo run produces. The ring mode exercises the fused
+    ownership-aware paged write on resume; the preempted request's
+    registered chunks make the resume a prefix hit."""
+    from repro.configs import get_config, smoke_config
+    from repro.distributed import context as dctx
+    from repro.distributed.sharding_rules import Rules
+    from repro.models import lm
+    from repro.serving.engine import Engine, Request
+    from repro.testing.decode_reference import reference_generate
+    cfg = smoke_config(get_config("llama3-8b")).replace(
+        n_layers=2, dtype=jnp.float32)
+    mesh = _mesh(1, 4)
+    rng = np.random.default_rng(5)
+    prompts = [[int(t) for t in rng.integers(1, cfg.vocab_size, 17)]
+               for _ in range(2)]
+    for mode in ("bsp", "ring"):
+        ctx = dctx.make_context(mesh, fusion_mode=mode, rules=Rules(mesh))
+        with dctx.use(ctx), mesh:
+            params = lm.init_params(jax.random.PRNGKey(0), cfg)
+            # each request's history grows to 17+20-1 = 36 tokens -> 5
+            # blocks; two of them need 10 > 8 pool blocks: both stall
+            eng = Engine(params, cfg, batch=2, max_len=64,
+                         prefill_chunk=8, block_size=8, n_blocks=8)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(rid=i, prompt=list(p),
+                                   max_new_tokens=20))
+            done = eng.run()
+            assert len(done) == 2, (mode, len(done))
+            assert eng.preempt_count >= 1, (mode, eng.preempt_count)
+            for r in done:
+                want = reference_generate(params, cfg, r.prompt, 20, 64)
+                assert r.out_tokens == want, \
+                    (mode, r.rid, r.out_tokens, want)
 
 
 # keep LAST so every check_* above is collected (a mid-file listing

@@ -1,5 +1,4 @@
 """Checkpointing: roundtrip, atomicity, retention, async, elasticity."""
-import json
 import os
 
 import jax

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import REGISTRY, get_config, smoke_config
+from repro.configs import get_config, smoke_config
 from repro.configs.shapes import ARCH_IDS
 from repro.models import lm
 from repro.optim import adamw

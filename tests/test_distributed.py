@@ -28,7 +28,7 @@ def battery_results():
     proc = subprocess.run(
         [sys.executable, "-m", "repro.testing.run_checks"],
         env=env, capture_output=True, text=True, timeout=1800)
-    lines = [l for l in proc.stdout.splitlines() if l.startswith("{")]
+    lines = [ln for ln in proc.stdout.splitlines() if ln.startswith("{")]
     assert lines, f"battery produced no JSON.\nstdout: {proc.stdout[-2000:]}\n" \
                   f"stderr: {proc.stderr[-2000:]}"
     return json.loads(lines[-1])

@@ -1,7 +1,6 @@
 """Fault tolerance: preemption, heartbeats, stragglers, elastic remesh,
 and full train->checkpoint->resume equivalence."""
 import json
-import os
 import time
 
 import numpy as np

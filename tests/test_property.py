@@ -3,7 +3,6 @@
 ``hypothesis`` is an optional dev dependency; the module is skipped
 cleanly (instead of failing collection) when it isn't installed.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,4 @@
 """Roofline analysis unit tests (parser factors covered in test_property)."""
-import numpy as np
-
 from repro.configs import get_config, get_shape
 from repro.roofline import analysis
 from repro.roofline.hw import V5E

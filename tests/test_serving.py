@@ -63,9 +63,14 @@ def test_staggered_admission_matches_solo_runs():
     variant runs in the subprocess battery:
     test_distributed.py::test_check[check_engine_staggered_admission].)"""
     cfg, params = _setup()
+    # tick/dispatch counts recorded from the pre-scheduler-subsystem
+    # engine on this exact workload: the fcfs policy must reproduce its
+    # admission decisions byte-for-byte, not just the token streams
+    anchor = {1: (27, 27), 4: (15, 15)}
     for chunk in (1, 4):
         eng = Engine(params, cfg, batch=2, max_len=128,
                      prefill_chunk=chunk)
+        assert eng.policy.name == "fcfs"        # the anchored default
         prompts = [[1, 2, 3, 4, 5, 6, 7], [3, 4], [5, 6, 9, 11, 13],
                    [9, 8, 7], [2] * 11]
         arrivals = [0, 0, 1, 3, 6]
@@ -76,6 +81,8 @@ def test_staggered_admission_matches_solo_runs():
             eng.submit(r)
         done = eng.run()
         assert len(done) == len(prompts)
+        assert (eng.tick_count, eng.dispatch_count) == anchor[chunk], \
+            (chunk, eng.tick_count, eng.dispatch_count)
         for r in done:
             want = _reference_generate(params, cfg, r.prompt, 4)
             assert r.out_tokens == want, \
@@ -363,19 +370,225 @@ def test_paged_admission_defers_until_blocks_free():
         assert r.out_tokens == want, (r.rid, r.out_tokens, want)
 
 
-def test_paged_pool_exhaustion_raises():
-    """All slots stalled on an empty pool is unresolvable without
-    preemption: the engine must fail loudly, not livelock."""
+def test_paged_pool_exhaustion_unresolvable_raises():
+    """Preemption makes exhaustion recoverable, but a request whose
+    token history has outgrown the WHOLE pool can never be re-admitted
+    — no schedule finishes it, so the engine must still fail loudly
+    rather than preempt-livelock."""
     import pytest as _pytest
     cfg, params = _setup()
     eng = Engine(params, cfg, batch=2, max_len=64, prefill_chunk=4,
                  block_size=8, n_blocks=2)
-    # two requests that each fit admission (2 blocks for prompt+1) but
-    # whose combined decode growth exceeds the pool
+    # each request wants 7 + 30 - 1 = 36 written tokens: more than the
+    # 2*8-token pool can hold even running alone
     eng.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5, 6, 7], max_new_tokens=30))
     eng.submit(Request(rid=1, prompt=[9, 8, 7, 6, 5, 4, 3], max_new_tokens=30))
-    with _pytest.raises(RuntimeError, match="exhausted"):
+    with _pytest.raises(RuntimeError, match="grown past"):
         eng.run()
+
+
+# ---------------------------------------------------- scheduler + preemption
+def test_pool_exhaustion_preempts_and_completes():
+    """THE preemption acceptance scenario: combined decode growth
+    exceeds the pool, every slot stalls — the old engine raised; now a
+    victim is evicted (blocks freed, generated tokens folded into its
+    effective prompt), the survivor finishes, the victim resumes, and
+    every request decodes token-for-token what a solo run produces."""
+    cfg, params = _setup()
+    eng = Engine(params, cfg, batch=2, max_len=64, prefill_chunk=4,
+                 block_size=8, n_blocks=2)
+    # 7 + 8 - 1 = 14 written tokens each -> 2 blocks each, pool holds 2:
+    # recoverable by running the requests one after the other
+    eng.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5, 6, 7], max_new_tokens=8))
+    eng.submit(Request(rid=1, prompt=[9, 8, 7, 6, 5, 4, 3], max_new_tokens=8))
+    done = eng.run()
+    assert len(done) == 2
+    assert eng.preempt_count >= 1
+    m = eng.metrics(done)
+    assert m["preemptions"] == eng.preempt_count
+    preempted = [r for r in done if r.preemptions]
+    assert preempted, "no request records its own preemption"
+    for r in done:
+        want = _reference_generate(params, cfg, r.prompt, 8)
+        assert r.out_tokens == want, (r.rid, r.out_tokens, want)
+
+
+def test_preemption_resume_is_prefix_hit():
+    """A preempted request's fully-written chunks re-register as prefix
+    blocks, so its resume skips re-prefilling them (deref order feeds
+    the LRU leaves-first, keeping the chain head matchable)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+    prompts = [[int(t) for t in rng.integers(1, cfg.vocab_size, 17)]
+               for _ in range(2)]
+    eng = Engine(params, cfg, batch=2, max_len=64, prefill_chunk=8,
+                 block_size=8, n_blocks=6)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=12))
+    done = eng.run()
+    assert eng.preempt_count >= 1
+    assert eng.pool.prefix_hits >= 1, eng.pool.metrics()
+    assert eng.pool.prefix_hit_tokens >= 8
+    for r in done:
+        want = _reference_generate(params, cfg, r.prompt, 12)
+        assert r.out_tokens == want, (r.rid, r.out_tokens, want)
+
+
+def test_preemption_token_identity_temperature():
+    """Preemption must not perturb SAMPLED streams either: the PRNG is
+    keyed on (seed, rid, token index), so a preempted+resumed request
+    reproduces its solo-run tokens exactly."""
+    cfg, params = _setup()
+    prompts = {0: [1, 2, 3, 4, 5, 6, 7], 1: [9, 8, 7, 6, 5, 4, 3]}
+    solo = {}
+    for rid, p in prompts.items():
+        e = Engine(params, cfg, batch=2, max_len=64, sampler="temperature",
+                   seed=7, block_size=8)
+        e.submit(Request(rid=rid, prompt=list(p), max_new_tokens=8,
+                         temp=1.0))
+        solo[rid] = e.run()[0].out_tokens
+    eng = Engine(params, cfg, batch=2, max_len=64, prefill_chunk=4,
+                 sampler="temperature", seed=7, block_size=8, n_blocks=2)
+    for rid, p in prompts.items():
+        eng.submit(Request(rid=rid, prompt=list(p), max_new_tokens=8,
+                           temp=1.0))
+    outs = {r.rid: r.out_tokens for r in eng.run()}
+    assert eng.preempt_count >= 1
+    assert outs == solo, (outs, solo)
+
+
+def test_priority_scheduler_orders_admissions():
+    """A high-priority submission overtakes earlier low-priority ones
+    still in the queue (but never an already-running request)."""
+    cfg, params = _setup()
+    eng = Engine(params, cfg, batch=1, max_len=64, scheduler="priority")
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2, priority=0))
+    eng.submit(Request(rid=1, prompt=[3, 4], max_new_tokens=2, priority=0))
+    eng.submit(Request(rid=2, prompt=[5, 6], max_new_tokens=2, priority=5))
+    order = [r.rid for r in eng.run()]
+    assert order.index(2) < order.index(1), order
+
+
+def test_priority_aging_prevents_starvation():
+    """Sustained oversubscription by fresh high-priority arrivals: the
+    aged low-priority request must overtake fresh high-priority traffic
+    (without aging it finishes dead last)."""
+    from repro.serving.scheduler import PriorityScheduler
+    cfg, params = _setup()
+
+    def run(aging_ticks):
+        eng = Engine(params, cfg, batch=1, max_len=64,
+                     scheduler=PriorityScheduler(aging_ticks=aging_ticks))
+        eng.submit(Request(rid=0, prompt=[9, 9], max_new_tokens=2,
+                           priority=0))
+        # a fresh high-priority request lands every 2 ticks — exactly
+        # the service rate (1 prefill + 1 decode tick), so some
+        # high-priority work is eligible at every admission point and
+        # raw priority alone never lets the low-priority request in
+        for i in range(1, 8):
+            eng.submit(Request(rid=i, prompt=[i, i], max_new_tokens=2,
+                               priority=3), at_tick=2 * (i - 1))
+        return [r.rid for r in eng.run()]
+
+    starved = run(aging_ticks=10_000)      # effectively no aging
+    assert starved.index(0) == len(starved) - 1, starved
+    aged = run(aging_ticks=1)              # +1 level per waiting tick
+    assert aged.index(0) < len(aged) - 3, aged
+
+
+def test_slo_scheduler_edf_overtakes():
+    """Deadline-tagged requests run earliest-deadline-first ahead of
+    untagged FIFO traffic."""
+    cfg, params = _setup()
+    eng = Engine(params, cfg, batch=1, max_len=64, scheduler="slo")
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2))
+    eng.submit(Request(rid=1, prompt=[3, 4], max_new_tokens=2))
+    eng.submit(Request(rid=2, prompt=[5, 6], max_new_tokens=2,
+                       deadline_ms=50.0))
+    order = [r.rid for r in eng.run()]
+    assert order.index(2) < order.index(1), order
+
+
+def test_get_scheduler_rejects_unknown():
+    import pytest as _pytest
+    from repro.serving.scheduler import get_scheduler
+    with _pytest.raises(ValueError, match="unknown scheduler"):
+        get_scheduler("lifo")
+    cfg, params = _setup()
+    with _pytest.raises(ValueError, match="unknown scheduler"):
+        Engine(params, cfg, batch=2, max_len=64, scheduler="edf")
+
+
+def test_sliding_window_reclaim_frees_dead_blocks():
+    """Sliding-window archs free blocks that rolled permanently out of
+    the window: the rolling workload stops pinning dead blocks, and the
+    tokens still match the solo reference exactly (the reclaimed
+    positions were already masked out of every future step)."""
+    cfg, params = _setup()
+    cfgw = cfg.replace(sliding_window=16)
+    paramsw = lm.init_params(jax.random.PRNGKey(0), cfgw)
+    rng = np.random.default_rng(9)
+    prompt = [int(t) for t in rng.integers(1, cfgw.vocab_size, 30)]
+    eng = Engine(paramsw, cfgw, batch=2, max_len=64, prefill_chunk=8,
+                 block_size=8)
+    eng.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=12))
+    done = eng.run()
+    m = eng.metrics(done)
+    assert m["kv_blocks_reclaimed"] >= 3, m
+    assert eng.pool.blocks_in_use == 0          # nothing left pinned
+    # 30+12-1 = 41 written tokens -> 6 blocks unreclaimed; the window
+    # (16 tokens = 2 blocks) plus allocation slack must bound the HWM
+    assert m["kv_blocks_hwm"] <= 5, m
+    want = _reference_generate(paramsw, cfgw, prompt, 12)
+    assert done[0].out_tokens == want, (done[0].out_tokens, want)
+
+
+def test_cache_pool_preempt_releases_and_reregisters():
+    """CachePool.preempt frees the slot's references but keeps its
+    fully-written chunks registered (resident), so re-allocation of the
+    same history is a prefix hit."""
+    from repro.serving.kv_cache import CachePool
+    cfg, params = _setup()
+    pool = CachePool(params, cfg, batch=2, max_len=32, block_size=8,
+                     n_blocks=4)
+    history = list(range(1, 18))                # 17 tokens
+    slot, reused = pool.alloc(history)
+    assert reused == 0
+    assert pool.writable(slot, 17) == 17
+    pool.advance(slot, 17)
+    pool.register_prompt_chunks(slot, history)
+    pool.preempt(slot, history)
+    assert pool.preempted_slots == 1
+    assert pool.n_active == 0
+    assert pool.blocks_in_use == 0              # references all dropped
+    assert pool.blocks_resident >= 2            # full chunks stay matchable
+    slot2, reused2 = pool.alloc(history)
+    assert reused2 == 16, reused2               # resume = prefix hit
+
+
+def test_percentile_helper():
+    from repro.serving.metrics import latency_summary, percentile
+    assert percentile([], 50) == 0.0
+    assert percentile([3.0], 99) == 3.0
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert abs(percentile(xs, 50) - 2.5) < 1e-12
+    np.testing.assert_allclose(percentile(xs, 99), np.percentile(xs, 99),
+                               rtol=1e-12)
+    s = latency_summary([0.1, 0.2, 0.3], "ttft")
+    assert set(s) == {"p50_ttft_s", "p99_ttft_s", "max_ttft_s"}
+    assert s["max_ttft_s"] == 0.3
+
+
+def test_submit_rejects_empty_prompt():
+    """An empty prompt used to die ticks later with an IndexError deep
+    in tick(); it must fail fast at submit with a clear message."""
+    import pytest as _pytest
+    cfg, params = _setup()
+    eng = Engine(params, cfg, batch=2, max_len=64)
+    with _pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(rid=0, prompt=[], max_new_tokens=2))
 
 
 def test_submit_rejects_never_admissible_prompt():

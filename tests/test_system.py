@@ -6,8 +6,6 @@ The paper's claim structure, reproduced as tests:
   3. a small model actually trains (loss decreases) through the full
      stack (data -> sharded step -> optimizer -> checkpoint).
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
