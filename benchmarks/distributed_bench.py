@@ -5,6 +5,7 @@ Wall-clock on fake CPU devices measures *structure* (kernel counts,
 serialization), not ICI overlap — the roofline/tax model supplies the
 TPU-projected numbers next to each measurement.
 """
+import json
 import sys
 import time
 
@@ -215,6 +216,147 @@ def bench_sched_slo():
               f"preemptions={m['preemptions']}")
 
 
+def _paged_bounded_setup(B, KVH, D, bs, n_blocks, max_blocks, live_blocks,
+                         seed=3):
+    """Pool + tables for the bounded-vs-masked comparison: every slot
+    references ``live_blocks`` distinct blocks scattered over the pool
+    (and therefore over the rank shards), lengths fill them exactly."""
+    rng = np.random.default_rng(seed)
+    blocks = rng.permutation(n_blocks)[:B * live_blocks]
+    tables = np.full((B, max_blocks), -1, np.int32)
+    tables[:, :live_blocks] = blocks.reshape(B, live_blocks)
+    k = jax.random.normal(jax.random.PRNGKey(1), (n_blocks, bs, KVH, D),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (n_blocks, bs, KVH, D),
+                          jnp.float32)
+    cur = np.full((B,), live_blocks * bs, np.int32)
+    return k, v, jnp.asarray(tables), jnp.asarray(cur)
+
+
+def _paged_scored_positions(n_loc, bs, KVH, D, B, width, bounded):
+    """STRUCTURAL per-slot work model: positions each slot scores per
+    rank per step, derived from the implementation's own arrays — the
+    bounded number is the position axis of the gather the fused region
+    actually performs (jax.eval_shape on fd.gather_owned_blocks), the
+    masked number is the flattened local pool shard."""
+    if not bounded:
+        return n_loc * bs
+    view, _ = jax.eval_shape(
+        fd.gather_owned_blocks,
+        jax.ShapeDtypeStruct((n_loc, bs, KVH, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, width), jnp.int32), 0)
+    return view.shape[1]
+
+
+def bench_paged_bounded(W=8):
+    """Tentpole bench: bounded table-gather vs masked-pool paged decode
+    across pool sizings. The masked path's per-slot work scales with
+    the pool shard (batch x the contiguous per-slot FLOPs at parity);
+    the bounded path's is constant at gather_width x block_size,
+    bounded by max_blocks x block_size whatever the pool size. The
+    derived column carries the structural per-slot scored-position
+    counts next to the (fake-device, structure-only) wall clock."""
+    n = len(jax.devices())
+    W = min(W, n)
+    mesh = jax.make_mesh((W,), ("model",))
+    B, H, KVH, D = 8, 8, 4, 16
+    bs, max_blocks, live = 8, 4, 2
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, D), jnp.float32)
+    kn = jax.random.normal(jax.random.PRNGKey(4), (B, KVH, D), jnp.float32)
+    vn = jax.random.normal(jax.random.PRNGKey(5), (B, KVH, D), jnp.float32)
+    bound = max_blocks * bs
+    gw = 1
+    while gw < live:
+        gw *= 2
+    for n_blocks in (B * max_blocks // 2, B * max_blocks,
+                     2 * B * max_blocks):     # oversub / parity / roomy
+        n_blocks += (-n_blocks) % W
+        n_loc = n_blocks // W
+        k, v, tables, cur = _paged_bounded_setup(B, KVH, D, bs, n_blocks,
+                                                 max_blocks, live)
+        sh = NamedSharding(mesh, P("model", None, None, None))
+        k_sh, v_sh = jax.device_put(k, sh), jax.device_put(v, sh)
+        for bounded, tb in ((False, tables), (True, tables[:, :gw])):
+            fn = jax.jit(lambda q, kn, vn, kp, vp, c, t, bd=bounded:
+                         fd.decode_paged_attention_fused_sm(
+                             q, kn, vn, kp, vp, c, t, mesh, scale=0.25,
+                             mode="ring", bounded=bd)[0])
+            us = timeit(fn, q, kn, vn, k_sh, v_sh, cur, tb, iters=10)
+            scored = _paged_scored_positions(n_loc, bs, KVH, D, B,
+                                             tb.shape[1], bounded)
+            tag = "bounded" if bounded else "masked"
+            print(f"paged_{tag}_pool{n_blocks},{us:.1f},"
+                  f"per_slot_scored={scored};"
+                  f"bound_max_blocks_x_bs={bound}")
+
+
+def bench_ci(out_path="BENCH_ci.json"):
+    """Per-PR CI perf gate (bench-smoke job): tiny interpret-friendly
+    shapes, one bounded-vs-masked comparison. The gate is STRUCTURAL —
+    the bounded path's modeled per-slot work (the position axis of the
+    gather it actually performs) must stay <= max_blocks x block_size —
+    so CPU runners stay deterministic; wall-clock goes into the JSON as
+    context only. Also asserts bounded == masked numerically (rtol
+    1e-5) so the gate cannot pass on a broken kernel. Writes
+    BENCH_ci.json and exits nonzero on violation."""
+    n = len(jax.devices())
+    W = min(4, n)
+    mesh = jax.make_mesh((W,), ("model",))
+    B, H, KVH, D = 4, 8, 4, 16
+    bs, max_blocks, live = 8, 4, 2
+    n_blocks = B * max_blocks
+    n_blocks += (-n_blocks) % W
+    n_loc = n_blocks // W
+    gw = 1
+    while gw < live:
+        gw *= 2
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, D), jnp.float32)
+    kn = jax.random.normal(jax.random.PRNGKey(4), (B, KVH, D), jnp.float32)
+    vn = jax.random.normal(jax.random.PRNGKey(5), (B, KVH, D), jnp.float32)
+    k, v, tables, cur = _paged_bounded_setup(B, KVH, D, bs, n_blocks,
+                                             max_blocks, live)
+    sh = NamedSharding(mesh, P("model", None, None, None))
+    k_sh, v_sh = jax.device_put(k, sh), jax.device_put(v, sh)
+    res, times = {}, {}
+    for bounded, tb in ((False, tables), (True, tables[:, :gw])):
+        fn = jax.jit(lambda q, kn, vn, kp, vp, c, t, bd=bounded:
+                     fd.decode_paged_attention_fused_sm(
+                         q, kn, vn, kp, vp, c, t, mesh, scale=0.25,
+                         mode="ring", bounded=bd)[0])
+        tag = "bounded" if bounded else "masked"
+        times[tag] = timeit(fn, q, kn, vn, k_sh, v_sh, cur, tb,
+                            iters=3, warmup=1)
+        res[tag] = np.asarray(fn(q, kn, vn, k_sh, v_sh, cur, tb))
+    np.testing.assert_allclose(res["bounded"], res["masked"],
+                               rtol=1e-5, atol=1e-5)
+    bound = max_blocks * bs
+    scored_b = _paged_scored_positions(n_loc, bs, KVH, D, B, gw, True)
+    scored_m = _paged_scored_positions(n_loc, bs, KVH, D, B,
+                                       tables.shape[1], False)
+    report = {
+        "check": "paged-bounded per-slot work <= max_blocks*block_size",
+        "ok": bool(scored_b <= bound),
+        "bounded_per_slot_scored": int(scored_b),
+        "masked_per_slot_scored": int(scored_m),
+        "bound_max_blocks_x_block_size": int(bound),
+        "gather_width": int(gw),
+        "block_size": int(bs),
+        "max_blocks": int(max_blocks),
+        "n_blocks": int(n_blocks),
+        "devices": int(W),
+        "bounded_us": round(times["bounded"], 1),
+        "masked_us": round(times["masked"], 1),
+        "outputs_match": True,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"bench_ci,{times['bounded']:.1f},"
+          f"per_slot_scored={scored_b};bound={bound};ok={report['ok']}")
+    if not report["ok"]:
+        sys.exit(f"paged-bounded per-slot work {scored_b} exceeds "
+                 f"bound {bound}")
+
+
 def bench_pallas_ag_gemm(W=4):
     """Fused in-kernel AG+GEMM (interpret mode: structural check only)."""
     mesh = jax.make_mesh((W,), ("model",))
@@ -239,7 +381,13 @@ if __name__ == "__main__":
         bench_serving_engine()
     if which in ("all", "paged"):
         bench_paged_capacity()
+    if which in ("all", "bounded"):
+        bench_paged_bounded()
     if which in ("all", "sched"):
         bench_sched_slo()
     if which in ("all", "pallas"):
         bench_pallas_ag_gemm()
+    if which == "ci":
+        # per-PR bench-smoke gate: structural per-slot work bound +
+        # bounded==masked numeric identity; writes BENCH_ci.json
+        bench_ci()

@@ -322,6 +322,30 @@ def paged_local_partial_attention(q, k_loc, v_loc, valid, scale):
     return local_partial_attention(q, kb, vb, valid, scale)
 
 
+def gather_owned_blocks(pool, tables, base):
+    """Gather each slot's referenced blocks that live on THIS rank's pool
+    shard — the bounded-work half of the table-gather paged decode.
+
+    pool: (n_loc, bs, KVH, D) local shard holding global blocks
+    [base, base + n_loc); tables: (B, C) int32 global block ids.
+    Returns (view (B, C*bs, KVH, D) in logical position order,
+    owned (B, C) bool). A table entry that is ``-1`` (a sliding-window
+    reclaim hole) or lives on another rank gathers block 0 as padding and
+    comes back with ``owned=False`` — callers mask those positions, so
+    cross-shard misses and holes are never scored as real KV.
+
+    Per-slot work is C*bs positions — bounded by the table width the
+    caller hands in (``max_blocks``, or the live gather-width bucket) —
+    instead of the whole n_loc*bs pool shard the masked-pool path scores.
+    """
+    n_loc = pool.shape[0]
+    owned = (tables >= base) & (tables < base + n_loc)
+    idx = jnp.where(owned, tables - base, 0)
+    v = pool[idx]                                # (B, C, bs, KVH, D)
+    B, C, bs = v.shape[:3]
+    return v.reshape(B, C * bs, *pool.shape[2:]), owned
+
+
 def paged_write(pool, new, tables, cur_len, active, *, owner_base=None,
                 n_owned=None):
     """Write each active slot's new KV at its current position through the
@@ -346,7 +370,8 @@ def paged_write(pool, new, tables, cur_len, active, *, owner_base=None,
 def decode_paged_attention_fused(q, k_new, v_new, k_pool, v_pool, cur_len,
                                  tables, *, axis: str, scale: float,
                                  mode: str = "ring",
-                                 window: int | None = None, active=None):
+                                 window: int | None = None, active=None,
+                                 bounded: bool = True):
     """Paged analogue of :func:`decode_attention_fused` (per-device body).
 
     One shard_map region does block-table-translated cache write +
@@ -355,6 +380,25 @@ def decode_paged_attention_fused(q, k_new, v_new, k_pool, v_pool, cur_len,
     (n_loc, bs, KVH, D) local block shard; tables: (B, C) replicated;
     cur_len: (B,) per-slot lengths INCLUDING this step's token for
     active slots. Returns (out, k_pool, v_pool).
+
+    ``bounded`` selects the per-slot work model:
+
+    * ``True`` (default) — **bounded table-gather**: each rank gathers
+      only the table rows it owns (:func:`gather_owned_blocks`) and
+      scores C*bs positions per slot, where C is the table width the
+      caller passes in. Callers shrink C to the live
+      ``max_blocks_in_use`` watermark in padded power-of-two buckets
+      (see ``serving.kv_cache.CachePool.gather_width``), so per-slot
+      work is bounded at ``max_blocks * block_size`` and usually far
+      less. ``-1`` reclaim holes and cross-shard entries are masked.
+    * ``False`` — the masked-pool oracle: every slot is scored against
+      the entire n_loc*bs local pool shard with a per-slot validity
+      mask. Kept as the token-identity reference; at parity pool sizing
+      it costs batch x the contiguous path's per-slot FLOPs.
+
+    Both paths share the write, the combine schedules, and the online-
+    softmax partial algebra, so they agree to float rounding and decode
+    token-identical streams.
     """
     W = jax_compat.axis_size(axis)
     i = lax.axis_index(axis)
@@ -369,14 +413,27 @@ def decode_paged_attention_fused(q, k_new, v_new, k_pool, v_pool, cur_len,
     v_pool = paged_write(v_pool, v_new, tables, cl, act,
                          owner_base=base, n_owned=n_loc)
 
-    gpos, has = paged_block_positions(tables, n_loc, i, bs)
-    valid = has[:, :, None] & (gpos < cl[:, None, None])
-    if window is not None:
-        valid = valid & (gpos >= cl[:, None, None] - window)
-    valid = valid.reshape(B, n_loc * bs)
-    partial = paged_local_partial_attention(
-        q, k_pool.reshape(n_loc * bs, *k_pool.shape[2:]),
-        v_pool.reshape(n_loc * bs, *v_pool.shape[2:]), valid, scale)
+    if bounded:
+        # gather AFTER the write so this step's token is attended
+        kview, owned = gather_owned_blocks(k_pool, tables, base)
+        vview, _ = gather_owned_blocks(v_pool, tables, base)
+        C = tables.shape[1]
+        gpos = (jnp.arange(C, dtype=jnp.int32)[:, None] * bs
+                + jnp.arange(bs, dtype=jnp.int32)[None, :])   # (C, bs)
+        valid = owned[:, :, None] & (gpos[None] < cl[:, None, None])
+        if window is not None:
+            valid = valid & (gpos[None] >= cl[:, None, None] - window)
+        partial = local_partial_attention(
+            q, kview, vview, valid.reshape(B, C * bs), scale)
+    else:
+        gpos, has = paged_block_positions(tables, n_loc, i, bs)
+        valid = has[:, :, None] & (gpos < cl[:, None, None])
+        if window is not None:
+            valid = valid & (gpos >= cl[:, None, None] - window)
+        valid = valid.reshape(B, n_loc * bs)
+        partial = paged_local_partial_attention(
+            q, k_pool.reshape(n_loc * bs, *k_pool.shape[2:]),
+            v_pool.reshape(n_loc * bs, *v_pool.shape[2:]), valid, scale)
     if W == 1:
         acc = partial
     elif mode == "bsp":
@@ -393,16 +450,27 @@ def decode_paged_attention_fused(q, k_new, v_new, k_pool, v_pool, cur_len,
 def decode_paged_attention_fused_sm(q, k_new, v_new, k_pool, v_pool, cur_len,
                                     tables, mesh, *, axis="model",
                                     scale: float, mode: str = "ring",
-                                    window: int | None = None, active=None):
+                                    window: int | None = None, active=None,
+                                    bounded: bool = True):
     """shard_map wrapper: pool sharded on the block dim (contiguous
     chunks), everything else replicated. n_blocks must divide by the
-    axis size (the serving pool rounds up at construction)."""
+    axis size (the serving pool rounds up at construction).
+
+    Gather-width contract (``bounded=True``): the ``tables`` the caller
+    passes may be a LEADING SLICE ``[:, :gather_width]`` of the full
+    (B, max_blocks) table — per-slot work is then gather_width x
+    block_size. The slice must cover every allocated (>= 0) entry of
+    every active slot; serving callers bucket the width to the next
+    power of two of the live ``max_blocks_in_use`` watermark so jit
+    recompiles stay bounded at log2(max_blocks) (see
+    ``lm.decode_step``)."""
     pool_spec = P(axis, None, None, None)
 
     def fn(q, k_new, v_new, kp, vp, cl, tb, *act):
         return decode_paged_attention_fused(
             q, k_new, v_new, kp, vp, cl, tb, axis=axis, scale=scale,
-            mode=mode, window=window, active=act[0] if act else None)
+            mode=mode, window=window, active=act[0] if act else None,
+            bounded=bounded)
 
     args = [q, k_new, v_new, k_pool, v_pool, cur_len, tables]
     ins = [P(), P(), P(), pool_spec, pool_spec, P(), P()]

@@ -123,11 +123,14 @@ def decode_attn_fused(q, k_new, v_new, k_cache, v_cache, cur_len, *, scale,
 
 def decode_attn_paged(q, k_new, v_new, k_pool, v_pool, cur_len,
                       block_tables, *, scale, window: int | None = None,
-                      active=None):
+                      active=None, bounded: bool = True):
     """Paged flash decode: block-table-translated cache write + partial
     attention over the block-sharded pool + combine, in ONE shard_map
     region (all fusion modes share the region; they differ in the
     combine schedule — bsp keeps the paper's blocking all-gather).
+    ``bounded`` (default) gathers each slot's referenced blocks through
+    its table first, bounding per-slot work at table-width x block_size;
+    ``bounded=False`` keeps the masked whole-pool-shard oracle.
     Returns (out, k_pool, v_pool)."""
     ctx = dctx.current()
     mode = _mode(ctx)
@@ -135,4 +138,5 @@ def decode_attn_paged(q, k_new, v_new, k_pool, v_pool, cur_len,
                "auto": "rs_ag", "bsp": "bsp"}[mode]
     return fd.decode_paged_attention_fused_sm(
         q, k_new, v_new, k_pool, v_pool, cur_len, block_tables, ctx.mesh,
-        scale=scale, mode=combine, window=window, active=active)
+        scale=scale, mode=combine, window=window, active=active,
+        bounded=bounded)

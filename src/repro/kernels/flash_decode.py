@@ -148,18 +148,29 @@ def _fd_paged_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, out_ref,
                      local_sem,
                      *, axis: str, W: int, scale: float,
                      use_barrier: bool = True):
-    """Paged variant of ``_fd_kernel``: the local KV shard is a slice of
-    the BLOCK POOL — (n_loc, block_size, KVH, D), global block
-    ``i*n_loc + j`` at local index j — and per-slot block tables
-    (scalar-prefetched) translate each streamed block back to its
-    logical positions. Streaming granularity is one pool block; the
-    online-softmax partials and the remote-DMA push/combine halves are
-    identical to the contiguous kernel."""
+    """Paged variant of ``_fd_kernel`` with BOUNDED per-slot work: the
+    local KV shard is a slice of the BLOCK POOL — (n_loc, block_size,
+    KVH, D), global block ``i*n_loc + j`` at local index j — and the
+    scalar-prefetched per-slot block tables DRIVE the stream: for each
+    slot the kernel walks the table slice (C entries), DMAs only the
+    locally-owned referenced blocks into VMEM, and scores C*block_size
+    positions — instead of iterating the whole pool dimension and
+    searching the table per block (n_loc*block_size positions per slot,
+    batch x the contiguous kernel's work at parity pool sizing). ``-1``
+    reclaim holes and entries owned by other ranks issue a clamped
+    padding fetch and are masked out of the online softmax. The
+    partials and the remote-DMA push/combine halves are identical to
+    the contiguous kernel.
+
+    The caller may pass a leading ``[:, :gather_width]`` slice of the
+    table (the serving layer's power-of-two gather-width bucket); the
+    slice must cover every allocated entry of every slot."""
     i = lax.axis_index(axis)
     B, H, D = q_ref.shape
     n_loc, bs, KVH = k_ref.shape[0], k_ref.shape[1], k_ref.shape[2]
     C = tbl_ref.shape[1]
     g = H // KVH
+    base = i * n_loc
 
     if use_barrier:
         @pl.when(W > 1)
@@ -174,14 +185,20 @@ def _fd_paged_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, out_ref,
                         device_id_type=pltpu.DeviceIdType.MESH)
             pltpu.semaphore_wait(barrier, W - 1)
 
-    # -------- Part 1: block-table-translated local attention ---------------
+    # -------- Part 1: table-driven bounded local attention -----------------
     for b in range(B):
         cur_len = len_ref[b]
         for h in range(KVH):
             q_h = q_ref[b, pl.ds(h * g, g), :].astype(jnp.float32)  # (g, D)
 
-            def body(j, carry):
+            def body(c, carry):
                 m, l, acc = carry
+                # the table entry names the block; fetch it only if this
+                # rank owns it (-1 holes and cross-shard blocks clamp to
+                # a padding fetch of local block 0 and are masked below)
+                gb = tbl_ref[b, c]
+                owned = (gb >= base) & (gb < base + n_loc)
+                j = jnp.where(owned, gb - base, 0)
                 fk = pltpu.make_async_copy(
                     k_ref.at[j, :, h, :], kbuf, fetch_sem)
                 fk.start()
@@ -190,17 +207,8 @@ def _fd_paged_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, out_ref,
                     v_ref.at[j, :, h, :], vbuf, fetch_sem)
                 fv.start()
                 fv.wait()
-                # logical chunk of global block i*n_loc + j in slot b's
-                # table (a block appears at most once per table row)
-                gb = i * n_loc + j
-                chunk = jnp.int32(0)
-                has = gb < 0          # False, traced
-                for c in range(C):
-                    hit = tbl_ref[b, c] == gb
-                    chunk = jnp.where(hit, jnp.int32(c), chunk)
-                    has = has | hit
-                gpos = chunk * bs + lax.iota(jnp.int32, bs)
-                valid = has & (gpos < cur_len)
+                gpos = c * bs + lax.iota(jnp.int32, bs)
+                valid = owned & (gpos < cur_len)
                 s = (q_h @ kbuf[...].astype(jnp.float32).T) * scale
                 s = jnp.where(valid[None, :], s, NEG)
                 m_new = jnp.maximum(m, jnp.max(s, axis=-1))
@@ -217,7 +225,7 @@ def _fd_paged_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, out_ref,
             m0 = jnp.full((g,), NEG, jnp.float32)
             l0 = jnp.zeros((g,), jnp.float32)
             a0 = jnp.zeros((g, D), jnp.float32)
-            m, l, acc = lax.fori_loop(0, n_loc, body, (m0, l0, a0))
+            m, l, acc = lax.fori_loop(0, C, body, (m0, l0, a0))
             part[b, pl.ds(h * g, g), pl.ds(0, D)] = acc
             part[b, pl.ds(h * g, g), D] = m
             part[b, pl.ds(h * g, g), D + 1] = l
@@ -268,7 +276,9 @@ def flash_decode_paged_fused(q, k_pool, v_pool, cur_len, tables, *,
 
     q: (B, H, D) replicated; k_pool/v_pool: (n_loc, block_size, KVH, D)
     local slice of the paged block pool; cur_len: (B,) int32 per-slot
-    lengths; tables: (B, max_blocks) int32 global block ids.
+    lengths; tables: (B, C) int32 global block ids — C may be a
+    gather-width leading slice of the full (B, max_blocks) table (see
+    ``_fd_paged_kernel``); per-slot work is C * block_size positions.
     Returns (B, H, D).
     """
     B, H, D = q.shape

@@ -71,7 +71,10 @@ def flash_decode_paged(q, k_pool, v_pool, cur_len, tables, mesh, *,
     replicated; k_pool/v_pool: (n_blocks, block_size, KVH, D) with the
     block dim sharded on `axis` (contiguous chunks — the serving pool's
     layout contract); cur_len: (B,) per-slot lengths; tables:
-    (B, max_blocks) int32 block tables, replicated."""
+    (B, max_blocks) int32 block tables, replicated — or a leading
+    ``[:, :gather_width]`` slice covering every allocated entry (the
+    serving layer's power-of-two bucketing): the kernel walks the table,
+    not the pool, so per-slot work is table-width x block_size."""
     W = mesh.shape[axis]
     cl = jnp.asarray(cur_len, jnp.int32).reshape(-1)
     tb = jnp.asarray(tables, jnp.int32)

@@ -60,6 +60,13 @@ def main(argv=None):
     p.add_argument("--kv-blocks", type=int, default=None,
                    help="KV pool size in blocks (default: contiguous "
                         "parity, batch*max_len worth)")
+    p.add_argument("--paged-gather", default="bounded",
+                   choices=("bounded", "masked"),
+                   help="distributed paged attention work model: gather "
+                        "each slot's blocks through its table (per-slot "
+                        "work bounded at gather_width*block_size) or "
+                        "score the whole masked pool shard (the "
+                        "token-identity oracle)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--metrics-file", default=None)
     args = p.parse_args(argv)
@@ -88,7 +95,8 @@ def main(argv=None):
                      prefill_chunk=args.prefill_chunk,
                      sampler=args.sampler, seed=args.seed,
                      block_size=args.block_size, n_blocks=args.kv_blocks,
-                     scheduler=args.scheduler)
+                     scheduler=args.scheduler,
+                     bounded_gather=args.paged_gather == "bounded")
         rng = jax.random.PRNGKey(args.seed + 1)
         for i in range(args.requests):
             rng, k = jax.random.split(rng)

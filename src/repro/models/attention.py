@@ -186,7 +186,7 @@ def apply_attn(params, x, cfg, *, positions=None, dense_threshold=2048):
 
 # --------------------------------------------------------------- decode step
 def decode_attn_step(params, x, cache, cur_len, cfg, active=None,
-                     block_tables=None):
+                     block_tables=None, bounded: bool = True):
     """One-token decode. x: (B, 1, d); cache: dict(k, v) strided seq-sharded
     (B, S_max, KVH, hd), or — with ``block_tables`` — a paged pool
     (n_blocks, block_size, KVH, hd) shared across slots. Returns
@@ -204,9 +204,14 @@ def decode_attn_step(params, x, cache, cur_len, cfg, active=None,
     position p of slot b lives at pool block ``block_tables[b, p//bs]``,
     offset ``p % bs``. The write and the attention read both translate
     through the table; slots grow block-at-a-time instead of owning a
-    contiguous max_len stripe. Sliding windows are applied as a validity
-    mask (no rolling reclaim — out-of-window blocks stay resident until
-    the slot frees; block-level reclaim is a scheduler concern)."""
+    contiguous max_len stripe. The table may be a leading slice of the
+    full row (the serving layer's gather-width bucketing) as long as it
+    covers every allocated entry. Sliding windows are applied as a
+    validity mask (no rolling reclaim — out-of-window blocks stay
+    resident until the slot frees; block-level reclaim is a scheduler
+    concern). ``bounded`` picks the distributed paged work model:
+    table-gather (bounded per-slot FLOPs, default) vs the masked
+    whole-pool-shard oracle."""
     ctx = dctx.current()
     B = x.shape[0]
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -236,7 +241,7 @@ def decode_attn_step(params, x, cache, cur_len, cfg, active=None,
             o, ck, cv = patterns.decode_attn_paged(
                 q[:, 0], k[:, 0], v[:, 0], cache["k"], cache["v"], cl_b,
                 block_tables, scale=scale, window=cfg.sliding_window,
-                active=act)
+                active=act, bounded=bounded)
         else:
             ck = fd.paged_write(cache["k"], k[:, 0], block_tables, cl_b, act)
             cv = fd.paged_write(cache["v"], v[:, 0], block_tables, cl_b, act)

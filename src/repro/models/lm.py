@@ -215,7 +215,8 @@ def release_slot_paged(state, slot: int):
     return set_slot_len(state, slot, 0)
 
 
-def decode_step(params, token, state, cfg, active=None):
+def decode_step(params, token, state, cfg, active=None,
+                gather_width: int | None = None, bounded: bool = True):
     """token: (B, 1) int32; one autoregressive step. Returns
     (logits (B, 1, V), new_state).
 
@@ -223,7 +224,23 @@ def decode_step(params, token, state, cfg, active=None):
     inactive slot's caches, recurrent states, and ``cur_len`` entry are
     left byte-identical, so heterogeneous slots (mid-prefill, decoding,
     idle) can share one jitted step. ``active=None`` means all slots
-    step (the lockstep special case)."""
+    step (the lockstep special case).
+
+    Gather-width bucketing contract (paged states only): ``gather_width``
+    is a STATIC compile-time width — the attention paths see only the
+    leading ``[:, :gather_width]`` slice of the block table, so per-slot
+    paged-attention work is gather_width x block_size positions instead
+    of the full pool shard. The caller must guarantee the slice covers
+    every allocated (>= 0) table entry of every active slot (the serving
+    layer uses ``CachePool.gather_width()``: the live
+    ``max_blocks_in_use`` watermark padded UP to the next power of two,
+    clamped to ``max_blocks``). Because each distinct width is a new jit
+    specialization, padding to power-of-two buckets bounds recompiles at
+    log2(max_blocks) over an engine's lifetime; ``None`` means the full
+    table width (no recompile coupling, maximum work). The returned
+    state always carries the FULL table. ``bounded`` selects the
+    distributed paged work model (table-gather vs masked-pool oracle);
+    single-device paged decode always gathers."""
     ctx = dctx.current()
     if active is None:
         cur_len = state["cur_len"] + 1        # includes the new token
@@ -242,9 +259,11 @@ def decode_step(params, token, state, cfg, active=None):
     if cfg.block == "rwkv":
         x = apply_norm(params["ln_in"], x, "layernorm")
     bt = state.get("block_tables")
+    btg = bt if (bt is None or gather_width is None) \
+        else bt[:, :gather_width]
     x, caches = transformer.decode(params["backbone"], x, state["caches"],
                                    cur_len, cfg, active=active,
-                                   block_tables=bt)
+                                   block_tables=btg, bounded=bounded)
     x = apply_norm(params["ln_f"], x, cfg.norm)
     logits = logits_fn(params, x, cfg)
     new_state = {"caches": caches, "cur_len": cur_len}
@@ -253,7 +272,8 @@ def decode_step(params, token, state, cfg, active=None):
     return logits, new_state
 
 
-def decode_chunk(params, tokens, counts, state, cfg):
+def decode_chunk(params, tokens, counts, state, cfg,
+                 gather_width: int | None = None, bounded: bool = True):
     """Chunked batched prefill: consume up to C tokens per slot in ONE
     jitted call (a ``lax.scan`` of ``decode_step`` over the chunk, so
     dispatch/launch overhead is paid once per tick, not per token).
@@ -264,6 +284,11 @@ def decode_chunk(params, tokens, counts, state, cfg):
                           2..C = prompt chunk).
     Returns (logits (B, 1, V) from each slot's LAST consumed token,
     new_state). Slots with count 0 return zero logits.
+
+    ``gather_width``/``bounded`` follow the :func:`decode_step`
+    gather-width bucketing contract; the width must cover the table
+    entries allocated for the WHOLE chunk (the serving layer allocates
+    blocks for the tick before computing the bucket).
     """
     B, C = tokens.shape
     V = cfg.vocab_size
@@ -272,7 +297,8 @@ def decode_chunk(params, tokens, counts, state, cfg):
         st, logits = carry
         act = j < counts
         lg, st = decode_step(params, tokens[:, j][:, None], st, cfg,
-                             active=act)
+                             active=act, gather_width=gather_width,
+                             bounded=bounded)
         logits = jnp.where(act[:, None, None], lg.astype(logits.dtype),
                            logits)
         return (st, logits), None

@@ -231,7 +231,8 @@ def _sel_state(active, old, new):
             active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), old, new)
 
 
-def decode(params, x, caches, cur_len, cfg, active=None, block_tables=None):
+def decode(params, x, caches, cur_len, cfg, active=None, block_tables=None,
+           bounded: bool = True):
     """One-token step. x: (B, 1, d). Returns (x, new_caches).
 
     ``cur_len``: scalar or per-slot (B,) lengths INCLUDING this token
@@ -239,7 +240,10 @@ def decode(params, x, caches, cur_len, cfg, active=None, block_tables=None):
     this step; inactive slots leave every cache/state leaf unchanged.
     ``block_tables`` (B, max_blocks) int32: paged KV — every attention
     cache access translates logical position -> (block, offset) through
-    it (see attention.decode_attn_step)."""
+    it (see attention.decode_attn_step; may be a gather-width leading
+    slice of the full table). ``bounded``: distributed paged attention
+    gathers through the table (bounded per-slot work) vs the masked
+    whole-pool-shard oracle."""
     if cfg.block in ("attn_mlp", "attn_moe"):
         def body(x, inp):
             lp, cache = inp
@@ -247,7 +251,8 @@ def decode(params, x, caches, cur_len, cfg, active=None, block_tables=None):
             y, new_cache = attention.decode_attn_step(lp["attn"], h, cache,
                                                       cur_len, cfg,
                                                       active=active,
-                                                      block_tables=block_tables)
+                                                      block_tables=block_tables,
+                                                      bounded=bounded)
             x = x + y
             h = apply_norm(lp["ln2"], x, cfg.norm)
             if "moe" in lp:
@@ -299,7 +304,8 @@ def decode(params, x, caches, cur_len, cfg, active=None, block_tables=None):
             h = apply_norm(shared["ln1"], x, cfg.norm)
             y, nac = attention.decode_attn_step(shared["attn"], h, ac,
                                                 cur_len, cfg, active=active,
-                                                block_tables=block_tables)
+                                                block_tables=block_tables,
+                                                bounded=bounded)
             x = x + y
             h = apply_norm(shared["ln2"], x, cfg.norm)
             x = x + mlp.apply_mlp_decode(shared["mlp"], h, cfg)

@@ -167,13 +167,22 @@ class Engine:
     worth). Size it below parity to serve mixed-length traffic in a
     fraction of the HBM; exhaustion under oversubscription preempts
     instead of failing.
+
+    ``bounded_gather`` — distributed paged attention gathers each slot's
+    referenced blocks through its table before scoring (per-slot work
+    bounded at gather_width x block_size; the width tracks the pool's
+    live ``max_blocks_in_use`` watermark in power-of-two buckets, so
+    jitted-step recompiles stay bounded at log2(max_blocks)). ``False``
+    keeps the masked whole-pool-shard path — the token-identity oracle
+    the battery checks the bounded path against.
     """
 
     def __init__(self, params, cfg, *, batch: int = 8, max_len: int = 512,
                  prefill_chunk: int = 8, sampler: str = "greedy",
                  seed: int = 0, block_size: int = 16,
                  n_blocks: int | None = None,
-                 scheduler: str | SchedulerPolicy = "fcfs"):
+                 scheduler: str | SchedulerPolicy = "fcfs",
+                 bounded_gather: bool = True):
         if sampler not in ("greedy", "temperature"):
             raise ValueError(f"unknown sampler {sampler!r}: "
                              f"expected 'greedy' or 'temperature'")
@@ -193,12 +202,21 @@ class Engine:
         self.dispatch_count = 0     # ticks that actually ran a jitted step
         self.preempt_count = 0      # victims evicted on pool exhaustion
         self._seq = 0               # submission order stamp
+        self.bounded_gather = bool(bounded_gather)
         # two jitted paths sharing the pool state: a 1-token step for
-        # all-decoding ticks, a C-token scan when any slot is prefilling
+        # all-decoding ticks, a C-token scan when any slot is prefilling.
+        # gw is the STATIC gather width (power-of-two bucket of the
+        # pool's live max_blocks_in_use watermark): each distinct bucket
+        # is one extra specialization, log2(max_blocks) worst case.
+        bounded = self.bounded_gather
         self._step1 = jax.jit(
-            lambda p, t, a, s: lm.decode_step(p, t, s, cfg, active=a))
+            lambda p, t, a, s, gw: lm.decode_step(
+                p, t, s, cfg, active=a, gather_width=gw, bounded=bounded),
+            static_argnums=(4,))
         self._stepC = jax.jit(
-            lambda p, t, c, s: lm.decode_chunk(p, t, c, s, cfg))
+            lambda p, t, c, s, gw: lm.decode_chunk(
+                p, t, c, s, cfg, gather_width=gw, bounded=bounded),
+            static_argnums=(4,))
         self._sample = jax.jit(sampler_lib.sample_batch)
 
     # ------------------------------------------------------------- queueing
@@ -337,11 +355,15 @@ class Engine:
             self._preempt_one()
             return []
         self.pool.sync()
+        # gather width AFTER the writable() loop: this tick's block
+        # allocations are in the table, so the bucket covers every
+        # position the jitted step will read or write
+        gw = self.pool.gather_width()
         self.dispatch_count += 1
         if cmax <= 1:
             logits, self.pool.state = self._step1(
                 self.params, jnp.asarray(tok[:, :1]),
-                jnp.asarray(cnt > 0), self.pool.state)
+                jnp.asarray(cnt > 0), self.pool.state, gw)
         else:
             # bucket the scan length to the next power of two so ticks
             # with little prefill left don't pay the full chunk, while
@@ -352,7 +374,7 @@ class Engine:
             cw = min(cw, C)
             logits, self.pool.state = self._stepC(
                 self.params, jnp.asarray(tok[:, :cw]), jnp.asarray(cnt),
-                self.pool.state)
+                self.pool.state, gw)
         nxt = self._next_tokens(logits, emit)
 
         finished = []

@@ -196,6 +196,32 @@ class CachePool:
         return self.n_blocks - len(self._free) - len(self._lru)
 
     @property
+    def max_blocks_in_use(self) -> int:
+        """Live gather-width watermark: highest table column holding an
+        allocated block across all slots, plus one (0 when nothing is
+        allocated). Sliding-window reclaim can hole out LOW columns
+        while the high ones stay live, so this tracks the highest used
+        column, not a block count. One vectorized scan of the host
+        table mirror — cheap enough to call every tick."""
+        used = np.nonzero((self.tables >= 0).any(axis=0))[0]
+        return int(used[-1]) + 1 if len(used) else 0
+
+    def gather_width(self) -> int:
+        """Padded gather-width bucket for the bounded table-gather
+        decode: the next power of two >= ``max_blocks_in_use``, clamped
+        to [1, max_blocks]. The engine threads this into the jitted
+        step as a STATIC width (the attention paths see only the
+        leading table slice), so each distinct value is a recompile —
+        power-of-two padding bounds that at log2(max_blocks)
+        specializations while the scored width tracks the live
+        high-water mark instead of the worst case."""
+        need = max(1, self.max_blocks_in_use)
+        w = 1
+        while w < need:
+            w *= 2
+        return min(w, self.max_blocks)
+
+    @property
     def blocks_resident(self) -> int:
         """In use + ref-0 resident prefix blocks."""
         return self.n_blocks - len(self._free)
@@ -453,6 +479,8 @@ class CachePool:
             "kv_blocks_resident": self.blocks_resident,
             "kv_block_occupancy": round(self.block_occupancy(), 4),
             "kv_blocks_hwm": self.blocks_hwm,
+            "kv_max_blocks_in_use": self.max_blocks_in_use,
+            "kv_gather_width": self.gather_width(),
             "kv_hbm_vs_contiguous": round(self.hbm_fraction_vs_contiguous(),
                                           4),
             "prefix_hits": self.prefix_hits,

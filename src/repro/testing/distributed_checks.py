@@ -544,6 +544,158 @@ def check_engine_preemption_token_identity():
                     (mode, r.rid, r.out_tokens, want)
 
 
+def _paged_hole_oracle(q, k_pool, v_pool, cur, tables, bs, scale,
+                       window=None):
+    """Dense paged oracle that masks -1 table holes explicitly (the
+    shipping reference only masks by cur_len/window, which suffices in
+    serving because reclaim holes are always outside the window)."""
+    from repro.core import flash_decode as fd
+    B, H, D = q.shape
+    KVH = k_pool.shape[2]
+    g = H // KVH
+    C = tables.shape[1]
+    kview = np.asarray(fd.gather_paged_view(k_pool, tables), np.float32)
+    vview = np.asarray(fd.gather_paged_view(v_pool, tables), np.float32)
+    gpos = np.arange(C * bs)
+    valid = ((np.asarray(tables) >= 0).repeat(bs, axis=1)
+             & (gpos[None, :] < np.asarray(cur)[:, None]))
+    if window is not None:
+        valid = valid & (gpos[None, :] >= np.asarray(cur)[:, None] - window)
+    qf = np.asarray(q, np.float32).reshape(B, KVH, g, D)
+    s = np.einsum("bkgd,bksd->bkgs", qf, kview.transpose(0, 2, 1, 3)) * scale
+    s = np.where(valid[:, None, None, :], s, np.finfo(np.float32).min)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = np.einsum("bkgs,bksd->bkgd", p, vview.transpose(0, 2, 1, 3))
+    return o.reshape(B, H, D)
+
+
+def _paged_bounded_case(modes, *, window=None):
+    """Shared body for the bounded-gather raw-op checks: tables with a
+    mid-row -1 reclaim hole, cross-shard block scatter, a prefix-shared
+    block, and a gather-width leading slice — bounded and masked must
+    both match the hole-masking dense oracle, write the same pool
+    bytes, and agree with each other to combine-schedule rounding."""
+    from repro.core import flash_decode as fd
+    mesh = _mesh(1, 4)
+    B, H, KVH, D = 2, 8, 4, 16
+    bs, n_blocks = 4, 16                    # 4 local blocks per rank
+    q = _rand(0, (B, H, D))
+    k_pool = _rand(1, (n_blocks, bs, KVH, D))
+    v_pool = _rand(2, (n_blocks, bs, KVH, D))
+    k_new, v_new = _rand(3, (B, KVH, D)), _rand(4, (B, KVH, D))
+    # slot 0: mid-table reclaim hole at chunk 1; slot 1 shares block 9
+    tables = jnp.array([[9, -1, 14, 5, -1, -1],
+                        [9, 7, 1, -1, -1, -1]], jnp.int32)
+    cur = jnp.array([15, 10], jnp.int32)    # includes this step's token
+    kp_ref, vp_ref = k_pool, v_pool
+    for b in range(B):
+        p = int(cur[b]) - 1
+        blk = int(tables[b, p // bs])
+        assert blk >= 0, "test bug: write position must be allocated"
+        kp_ref = kp_ref.at[blk, p % bs].set(k_new[b])
+        vp_ref = vp_ref.at[blk, p % bs].set(v_new[b])
+    want = _paged_hole_oracle(q, kp_ref, vp_ref, cur, tables, bs, 0.25,
+                              window=window)
+    pool_sh = NamedSharding(mesh, P("model", None, None, None))
+    # width 4 is the tightest slice covering every allocated entry —
+    # the serving layer's gather-width bucket for max_blocks_in_use=4
+    for width in (tables.shape[1], 4):
+        tb = tables[:, :width]
+        for mode in modes:
+            outs = {}
+            for bounded in (True, False):
+                out, ck, cv = jax.jit(
+                    lambda q, kn, vn, kp, vp, c, t, m=mode, bd=bounded:
+                    fd.decode_paged_attention_fused_sm(
+                        q, kn, vn, kp, vp, c, t, mesh, scale=0.25,
+                        mode=m, window=window, bounded=bd))(
+                    q, k_new, v_new, jax.device_put(k_pool, pool_sh),
+                    jax.device_put(v_pool, pool_sh), cur, tb)
+                np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL,
+                                           err_msg=f"{mode} bounded="
+                                                   f"{bounded} w={width}")
+                np.testing.assert_array_equal(np.asarray(ck),
+                                              np.asarray(kp_ref))
+                np.testing.assert_array_equal(np.asarray(cv),
+                                              np.asarray(vp_ref))
+                outs[bounded] = np.asarray(out)
+            np.testing.assert_allclose(outs[True], outs[False],
+                                       rtol=1e-6, atol=1e-6,
+                                       err_msg=f"{mode} bounded!=masked")
+
+
+def check_paged_bounded_vs_masked_modes():
+    """Tentpole raw-op oracle: the bounded table-gather paged decode ==
+    the masked whole-pool-shard path == the hole-masking dense oracle,
+    for every combine schedule, with reclaim holes, a sliding window,
+    and a gather-width leading slice."""
+    _paged_bounded_case(("bsp", "ring", "rs_ag"))
+    _paged_bounded_case(("ring",), window=6)
+
+
+def check_paged_bounded_gather_bsp_small():
+    """Fast-tier promotion (per-PR): the bsp-mode slice of the bounded
+    raw-op check at the same tiny shapes — keeps the bounded gather
+    from regressing silently between nightly battery runs."""
+    _paged_bounded_case(("bsp",))
+
+
+def check_engine_bounded_token_identity():
+    """Tentpole end-to-end oracle: bounded table-gather vs masked-pool
+    engines must decode TOKEN-IDENTICAL streams under bsp and ring —
+    including after preemption re-admits a victim on prefix-hit tables
+    (pool too small for combined growth) and, under ring, after
+    sliding-window reclaim leaves -1 holes in live tables. The masked
+    path is the PR-2/PR-3 regression anchor, so identity to it carries
+    identity to the solo-run reference."""
+    from repro.configs import get_config, smoke_config
+    from repro.distributed import context as dctx
+    from repro.distributed.sharding_rules import Rules
+    from repro.models import lm
+    from repro.serving.engine import Engine, Request
+    cfg = smoke_config(get_config("llama3-8b")).replace(
+        n_layers=2, dtype=jnp.float32)
+    mesh = _mesh(1, 4)
+    rng = np.random.default_rng(7)
+    prompts = [[int(t) for t in rng.integers(1, cfg.vocab_size, 17)]
+               for _ in range(2)]
+    wprompt = [int(t) for t in rng.integers(1, cfg.vocab_size, 30)]
+    for mode in ("bsp", "ring"):
+        ctx = dctx.make_context(mesh, fusion_mode=mode, rules=Rules(mesh))
+        with dctx.use(ctx), mesh:
+            params = lm.init_params(jax.random.PRNGKey(0), cfg)
+            streams = {}
+            for bounded in (True, False):
+                eng = Engine(params, cfg, batch=2, max_len=64,
+                             prefill_chunk=8, block_size=8, n_blocks=8,
+                             bounded_gather=bounded)
+                for i, p in enumerate(prompts):
+                    eng.submit(Request(rid=i, prompt=list(p),
+                                       max_new_tokens=20))
+                done = eng.run()
+                assert len(done) == 2, (mode, bounded, len(done))
+                assert eng.preempt_count >= 1, (mode, bounded)
+                streams[bounded] = {r.rid: r.out_tokens for r in done}
+            assert streams[True] == streams[False], (mode, streams)
+            if mode != "ring":
+                continue
+            # sliding-window reclaim holes (ring = fused paged write)
+            cfgw = cfg.replace(sliding_window=16)
+            paramsw = lm.init_params(jax.random.PRNGKey(0), cfgw)
+            wstreams = {}
+            for bounded in (True, False):
+                eng = Engine(paramsw, cfgw, batch=2, max_len=64,
+                             prefill_chunk=8, block_size=8,
+                             bounded_gather=bounded)
+                eng.submit(Request(rid=0, prompt=list(wprompt),
+                                   max_new_tokens=12))
+                done = eng.run()
+                assert eng.pool.blocks_reclaimed >= 3, (mode, bounded)
+                wstreams[bounded] = done[0].out_tokens
+            assert wstreams[True] == wstreams[False], (mode, wstreams)
+
+
 # keep LAST so every check_* above is collected (a mid-file listing
 # silently dropped later checks from the battery)
 ALL_CHECKS = [v for k, v in sorted(globals().items())
