@@ -21,6 +21,7 @@ from repro.core import collective_matmul as cm          # noqa: E402
 from repro.core import flash_decode as fd               # noqa: E402
 from repro.core import taxes                            # noqa: E402
 from repro.kernels import ops                           # noqa: E402
+from repro.serving.kv_cache import pow2_bucket          # noqa: E402
 
 
 def timeit(fn, *args, iters=20, warmup=3):
@@ -216,6 +217,41 @@ def bench_sched_slo():
               f"preemptions={m['preemptions']}")
 
 
+def bench_decode_megatick():
+    """Fused multi-token decode megaticks: the same lockstep decode
+    workload at decode_steps K in {1, 4, 8}. K=1 is the byte-identical
+    single-step anchor (one jitted launch + a full (B, V) logits
+    host round-trip per generated token); K>1 runs K steps per
+    dispatch with sampling device-resident. Derived columns are
+    STRUCTURAL, from the engine's own counters: dispatches per decode
+    token (<= 1/K at steady state — the quantity the megatick cuts)
+    and tokens per pure-decode dispatch; wall-clock tok/s rides along
+    as fake-device context."""
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm as lm_mod
+    from repro.serving.engine import Engine, Request
+
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=2)
+    params = lm_mod.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    prompts = [list(rng.integers(1, cfg.vocab_size, 8)) for _ in range(4)]
+    for K in (1, 4, 8):
+        eng = Engine(params, cfg, batch=4, max_len=128, prefill_chunk=8,
+                     decode_steps=K)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=[int(t) for t in p],
+                               max_new_tokens=33))
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        m = eng.metrics(done)
+        dpt = m["decode_dispatches"] / max(m["decode_tokens"], 1)
+        print(f"serve_megatick_K{K},{dt * 1e6:.1f},"
+              f"tok_per_s={m['new_tokens'] / dt:.1f};"
+              f"dispatches_per_decode_token={dpt:.4f};"
+              f"tokens_per_dispatch={m['tokens_per_dispatch']}")
+
+
 def _paged_bounded_setup(B, KVH, D, bs, n_blocks, max_blocks, live_blocks,
                          seed=3):
     """Pool + tables for the bounded-vs-masked comparison: every slot
@@ -265,9 +301,7 @@ def bench_paged_bounded(W=8):
     kn = jax.random.normal(jax.random.PRNGKey(4), (B, KVH, D), jnp.float32)
     vn = jax.random.normal(jax.random.PRNGKey(5), (B, KVH, D), jnp.float32)
     bound = max_blocks * bs
-    gw = 1
-    while gw < live:
-        gw *= 2
+    gw = pow2_bucket(live, max_blocks)
     for n_blocks in (B * max_blocks // 2, B * max_blocks,
                      2 * B * max_blocks):     # oversub / parity / roomy
         n_blocks += (-n_blocks) % W
@@ -290,15 +324,63 @@ def bench_paged_bounded(W=8):
                   f"bound_max_blocks_x_bs={bound}")
 
 
+def _bench_ci_megatick(K=4):
+    """Megatick leg of the CI gate: a lockstep decode workload on a
+    tiny smoke engine. STRUCTURAL — steady-state decode dispatches per
+    token, counted from the engine's own counters (never wall-clock),
+    must stay <= 1/K; the K=1 engine is run first and the streams must
+    be token-identical so the gate cannot pass on a broken fused
+    path. Returns the report fragment."""
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm as lm_mod
+    from repro.serving.engine import Engine, Request
+
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=1)
+    params = lm_mod.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    prompts = [list(rng.integers(1, cfg.vocab_size, 6)) for _ in range(4)]
+    streams, counts = {}, None
+    for k in (1, K):
+        eng = Engine(params, cfg, batch=4, max_len=64, prefill_chunk=8,
+                     decode_steps=k)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=[int(t) for t in p],
+                               max_new_tokens=17))
+        done = eng.run()
+        streams[k] = {r.rid: tuple(r.out_tokens) for r in done}
+        if k == K:
+            counts = (eng.decode_dispatch_count, eng.decode_token_count)
+    dpt = counts[0] / max(counts[1], 1)
+    return {
+        "megatick_check": "steady-state decode dispatches-per-token "
+                          "<= 1/K",
+        "megatick_ok": bool(dpt <= 1.0 / K
+                            and streams[1] == streams[K]),
+        "decode_steps": int(K),
+        "megatick_decode_dispatches": int(counts[0]),
+        "megatick_decode_tokens": int(counts[1]),
+        "megatick_dispatches_per_token": round(dpt, 4),
+        "megatick_bound": round(1.0 / K, 4),
+        "megatick_tokens_match_single_step": bool(
+            streams[1] == streams[K]),
+    }
+
+
 def bench_ci(out_path="BENCH_ci.json"):
     """Per-PR CI perf gate (bench-smoke job): tiny interpret-friendly
-    shapes, one bounded-vs-masked comparison. The gate is STRUCTURAL —
-    the bounded path's modeled per-slot work (the position axis of the
-    gather it actually performs) must stay <= max_blocks x block_size —
-    so CPU runners stay deterministic; wall-clock goes into the JSON as
-    context only. Also asserts bounded == masked numerically (rtol
-    1e-5) so the gate cannot pass on a broken kernel. Writes
-    BENCH_ci.json and exits nonzero on violation."""
+    shapes, STRUCTURAL assertions only, so CPU runners stay
+    deterministic; wall-clock goes into the JSON as context.
+
+    Gate 1 (paged bounded): the bounded path's modeled per-slot work
+    (the position axis of the gather it actually performs) must stay
+    <= max_blocks x block_size, with bounded == masked numerically
+    (rtol 1e-5) so the gate cannot pass on a broken kernel.
+
+    Gate 2 (decode megaticks): steady-state decode dispatches-per-token
+    <= 1/K, counted from the engine's own counters, with the K-step
+    streams token-identical to the single-step engine.
+
+    Writes BENCH_ci.json and exits nonzero on any violation."""
     n = len(jax.devices())
     W = min(4, n)
     mesh = jax.make_mesh((W,), ("model",))
@@ -307,9 +389,7 @@ def bench_ci(out_path="BENCH_ci.json"):
     n_blocks = B * max_blocks
     n_blocks += (-n_blocks) % W
     n_loc = n_blocks // W
-    gw = 1
-    while gw < live:
-        gw *= 2
+    gw = pow2_bucket(live, max_blocks)
     q = jax.random.normal(jax.random.PRNGKey(0), (B, H, D), jnp.float32)
     kn = jax.random.normal(jax.random.PRNGKey(4), (B, KVH, D), jnp.float32)
     vn = jax.random.normal(jax.random.PRNGKey(5), (B, KVH, D), jnp.float32)
@@ -336,6 +416,7 @@ def bench_ci(out_path="BENCH_ci.json"):
     report = {
         "check": "paged-bounded per-slot work <= max_blocks*block_size",
         "ok": bool(scored_b <= bound),
+        **_bench_ci_megatick(),
         "bounded_per_slot_scored": int(scored_b),
         "masked_per_slot_scored": int(scored_m),
         "bound_max_blocks_x_block_size": int(bound),
@@ -351,10 +432,18 @@ def bench_ci(out_path="BENCH_ci.json"):
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     print(f"bench_ci,{times['bounded']:.1f},"
-          f"per_slot_scored={scored_b};bound={bound};ok={report['ok']}")
+          f"per_slot_scored={scored_b};bound={bound};ok={report['ok']};"
+          f"megatick_dpt={report['megatick_dispatches_per_token']};"
+          f"megatick_ok={report['megatick_ok']}")
     if not report["ok"]:
         sys.exit(f"paged-bounded per-slot work {scored_b} exceeds "
                  f"bound {bound}")
+    if not report["megatick_ok"]:
+        sys.exit(
+            f"megatick gate: dispatches-per-token "
+            f"{report['megatick_dispatches_per_token']} vs bound "
+            f"{report['megatick_bound']}, tokens_match="
+            f"{report['megatick_tokens_match_single_step']}")
 
 
 def bench_pallas_ag_gemm(W=4):
@@ -379,6 +468,8 @@ if __name__ == "__main__":
         bench_scaling()
     if which in ("all", "serving"):
         bench_serving_engine()
+    if which in ("all", "megatick"):
+        bench_decode_megatick()
     if which in ("all", "paged"):
         bench_paged_capacity()
     if which in ("all", "bounded"):
@@ -389,5 +480,6 @@ if __name__ == "__main__":
         bench_pallas_ag_gemm()
     if which == "ci":
         # per-PR bench-smoke gate: structural per-slot work bound +
-        # bounded==masked numeric identity; writes BENCH_ci.json
+        # bounded==masked numeric identity + megatick dispatches-per-
+        # token bound with K==1 token identity; writes BENCH_ci.json
         bench_ci()

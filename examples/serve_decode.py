@@ -29,6 +29,12 @@ produce.
 ``--deadline-ms`` tags every third request with that TTFT target (the
 rest stay best-effort), so the slo policy has a mixed population to
 reorder.
+``--decode-steps`` sets the decode megatick length K: once no slot is
+prefilling, ONE jitted dispatch runs K decode steps with sampling
+device-resident, so the host stops paying a launch plus a full-logits
+round-trip per generated token (the demo defaults to 4; 1 is the
+byte-identical single-step path). Watch ``tokens_per_dispatch`` in the
+printed metrics rise with K.
 """
 import argparse
 import os
@@ -55,6 +61,10 @@ def main():
     p.add_argument("--deadline-ms", type=float, default=250.0,
                    help="TTFT target tagged onto every third request "
                         "for the slo policy")
+    p.add_argument("--decode-steps", type=int, default=4,
+                   help="decode megatick length K (jitted decode steps "
+                        "per dispatch, sampled on device; 1 = the "
+                        "single-step path)")
     args = p.parse_args()
 
     cfg = smoke_config(get_config("llama3-8b"))
@@ -64,7 +74,8 @@ def main():
     # short requests no longer pin max_len worth of HBM — and when the
     # mix does outgrow it, the scheduler preempts instead of failing
     eng = Engine(params, cfg, batch=4, max_len=256, prefill_chunk=8,
-                 block_size=16, n_blocks=24, scheduler=args.scheduler)
+                 block_size=16, n_blocks=24, scheduler=args.scheduler,
+                 decode_steps=args.decode_steps)
 
     rng = jax.random.PRNGKey(1)
     rng, ks = jax.random.split(rng)
@@ -102,6 +113,10 @@ def main():
           f"({m['prefix_hits']} hits, rate {m['prefix_hit_rate']:.0%})")
     print(f"scheduling: {m['preemptions']} preemptions, "
           f"p50/p99 TTFT {m['p50_ttft_s']}/{m['p99_ttft_s']}s")
+    print(f"megaticks: decode_steps={m['decode_steps']} -> "
+          f"{m['decode_tokens']} decode tokens over "
+          f"{m['decode_dispatches']} pure-decode dispatches "
+          f"({m['tokens_per_dispatch']} tokens/dispatch)")
     print(f"engine metrics: {m}")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"  req {r.rid}: reused {r.reused_tokens} prompt tokens, "

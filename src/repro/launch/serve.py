@@ -33,6 +33,12 @@ def main(argv=None):
     p.add_argument("--max-new", type=int, default=8)
     p.add_argument("--prefill-chunk", type=int, default=8,
                    help="prompt tokens consumed per slot per tick")
+    p.add_argument("--decode-steps", type=int, default=1,
+                   help="decode megatick length K: when no slot is "
+                        "prefilling, one jitted dispatch runs K decode "
+                        "steps with sampling device-resident, returning "
+                        "(B, K) token ids instead of K logit tensors "
+                        "(1 = the byte-identical single-step path)")
     p.add_argument("--stagger", type=int, default=0,
                    help="admit request i no earlier than tick i*STAGGER "
                         "(0 = all at once)")
@@ -96,6 +102,7 @@ def main(argv=None):
                      sampler=args.sampler, seed=args.seed,
                      block_size=args.block_size, n_blocks=args.kv_blocks,
                      scheduler=args.scheduler,
+                     decode_steps=args.decode_steps,
                      bounded_gather=args.paged_gather == "bounded")
         rng = jax.random.PRNGKey(args.seed + 1)
         for i in range(args.requests):

@@ -307,3 +307,56 @@ def decode_chunk(params, tokens, counts, state, cfg,
     (state, logits), _ = jax.lax.scan(body, (state, logits0),
                                       jnp.arange(C))
     return logits, state
+
+
+def decode_multi(params, token, state, cfg, *, steps: int, budgets,
+                 sample_fn, gather_width: int | None = None,
+                 bounded: bool = True):
+    """Fused multi-token decode megatick: ``steps`` autoregressive
+    decode steps in ONE jitted program, with sampling DEVICE-RESIDENT —
+    each scan iteration samples its next token in-graph and feeds it to
+    the following step through the carry, so the host neither ships
+    K x (B, V) logits down nor re-uploads tokens between steps. The
+    paper's Kernel Launch Overhead Tax and the per-token bulk
+    host<->device synchronization both collapse to once per megatick.
+
+    token:   (B, 1) int32 — each slot's last sampled (or final prompt)
+             token, the input to the first step.
+    steps:   STATIC scan length K (a jit specialization per value; the
+             serving layer buckets it to powers of two like the prefill
+             chunk, bounding recompiles at log2(decode_steps)).
+    budgets: (B,) int32 — how many of the K steps each slot runs. A
+             slot past its budget (it hit ``max_new_tokens``/``max_len``
+             mid-megatick, or the pool could not reserve its blocks) is
+             FROZEN byte-identically via the ``active`` mask, exactly
+             like an idle slot in :func:`decode_step`; 0 freezes the
+             whole megatick for that slot.
+    sample_fn: ``(logits (B, 1, V), j) -> (B, 1) int32`` — in-graph
+             sampler for scan step ``j``. The serving layer passes
+             either a plain argmax or the seeded batch sampler with
+             (seed, rid, token-index)-folded keys, ``j`` offsetting the
+             per-slot token index so streams stay
+             scheduling-independent and preemption-safe.
+
+    Returns (tokens (B, steps) int32, new_state). Row b is valid up to
+    ``budgets[b]`` tokens; past-budget entries repeat the slot's last
+    valid token and must be ignored by the caller.
+
+    ``gather_width``/``bounded`` follow the :func:`decode_step`
+    contract; the width must cover every block the WHOLE megatick
+    writes (the serving layer reserves all K steps' blocks before
+    computing the bucket).
+    """
+    def body(carry, j):
+        st, tok = carry
+        act = j < budgets
+        logits, st = decode_step(params, tok, st, cfg, active=act,
+                                 gather_width=gather_width,
+                                 bounded=bounded)
+        nxt = sample_fn(logits, j)
+        tok = jnp.where(act[:, None], nxt, tok)
+        return (st, tok), tok[:, 0]
+
+    (state, _), out = jax.lax.scan(body, (state, token),
+                                   jnp.arange(steps))
+    return out.T, state

@@ -39,6 +39,46 @@ Scheduling per tick:
    reclaim each slot's dead blocks (positions rolled permanently out of
    the window) so rolling workloads stop pinning memory.
 
+MEGATICKS (``decode_steps=K``, default 1): the per-token loop above
+re-levies two of the paper's taxes at token granularity — one jitted
+launch per generated token, plus a bulk host<->device barrier that
+ships full (B, V) logits down and the sampled token back up every
+tick. When every active slot is decoding (no prefill in flight), a
+K-step engine instead runs ONE fused jitted program of K decode steps
+with sampling DEVICE-RESIDENT (``lm.decode_multi``): each step's
+sampled token feeds the next step inside the scan, and only (B, K)
+token ids return to host. Megatick semantics:
+
+* one megatick is ONE scheduler tick and ONE dispatch — admission,
+  arrival ticks, preemption checks, prefix registration, and
+  sliding-window reclaim all happen at megatick BOUNDARIES;
+* every slot gets a per-megatick step budget
+  ``min(K, remaining max_new_tokens, max_len headroom, blocks the
+  pool can reserve)`` (``CachePool.reserve`` pre-allocates the blocks
+  the whole megatick will write); a slot that exhausts its budget at
+  step j < K freezes byte-identically for the remaining steps, exactly
+  like an inactive slot today. If every slot's budget is 0, the engine
+  preempts the policy's victim, as the single-step path does;
+* the scan length is bucketed to the next power of two (clamped at K)
+  and threaded as a STATIC jit arg like ``gather_width``, so ragged
+  tail megaticks don't pay the full K while compiles stay bounded at
+  log2(K);
+* sampling in-scan uses the same (seed, rid, token-index)-folded keys
+  as the host path, so sampled streams stay scheduling-independent and
+  preemption-safe; greedy engines argmax in-graph;
+* TTFT is unaffected (a request's first token is emitted by the tick
+  that completes its prefill, which is never a megatick); TPOT and
+  ``finished_t`` stamp at megatick boundaries, so sub-megatick
+  inter-token times are averaged over the K tokens of the batch that
+  produced them.
+
+``decode_steps=1`` is the regression anchor: it takes the exact
+single-step code path, byte-identical to the pre-megatick engine
+(pinned tick/dispatch counts). The ``tokens_per_dispatch`` metric and
+the ``decode_dispatches``/``decode_tokens`` counters expose the win
+structurally: steady-state decode costs <= 1/K dispatches per token
+(the CI bench gate asserts this from the counters, not wall-clock).
+
 Scheduling POLICY is pluggable (``scheduler=`` — a name or a
 ``repro.serving.scheduler.SchedulerPolicy`` instance; CLI flag
 ``--scheduler`` on ``repro.launch.serve`` and
@@ -89,7 +129,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.serving import sampler as sampler_lib
-from repro.serving.kv_cache import CachePool
+from repro.serving.kv_cache import CachePool, pow2_bucket
 from repro.serving.metrics import latency_summary
 from repro.serving.scheduler import SchedulerPolicy, get_scheduler
 
@@ -168,6 +208,15 @@ class Engine:
     fraction of the HBM; exhaustion under oversubscription preempts
     instead of failing.
 
+    ``decode_steps`` — decode megatick length K: when no slot is
+    prefilling, one jitted dispatch runs K decode steps with sampling
+    device-resident (``lm.decode_multi``), returning (B, K) token ids
+    instead of K full logit tensors. 1 (default) keeps the
+    byte-identical single-step path; larger K cuts steady-state decode
+    to <= 1/K dispatches per token while staying token-identical
+    (budgets freeze slots that finish mid-megatick; preemption and
+    sliding-window reclaim move to megatick boundaries).
+
     ``bounded_gather`` — distributed paged attention gathers each slot's
     referenced blocks through its table before scoring (per-slot work
     bounded at gather_width x block_size; the width tracks the pool's
@@ -182,10 +231,14 @@ class Engine:
                  seed: int = 0, block_size: int = 16,
                  n_blocks: int | None = None,
                  scheduler: str | SchedulerPolicy = "fcfs",
+                 decode_steps: int = 1,
                  bounded_gather: bool = True):
         if sampler not in ("greedy", "temperature"):
             raise ValueError(f"unknown sampler {sampler!r}: "
                              f"expected 'greedy' or 'temperature'")
+        if decode_steps < 1:
+            raise ValueError(f"decode_steps must be >= 1, "
+                             f"got {decode_steps}")
         self.policy = get_scheduler(scheduler)   # fail fast, pre-pool-init
         self.params = params
         self.cfg = cfg
@@ -198,9 +251,15 @@ class Engine:
                               block_size=block_size, n_blocks=n_blocks)
         self.sampler = sampler
         self._base_key = jax.random.PRNGKey(seed)
+        self.decode_steps = int(decode_steps)
         self.tick_count = 0
         self.dispatch_count = 0     # ticks that actually ran a jitted step
         self.preempt_count = 0      # victims evicted on pool exhaustion
+        # decode-phase structural counters (the megatick win): dispatches
+        # where every participating slot was decoding, and the tokens
+        # those dispatches produced — dispatches-per-token is their ratio
+        self.decode_dispatch_count = 0
+        self.decode_token_count = 0
         self._seq = 0               # submission order stamp
         self.bounded_gather = bool(bounded_gather)
         # two jitted paths sharing the pool state: a 1-token step for
@@ -217,7 +276,29 @@ class Engine:
             lambda p, t, c, s, gw: lm.decode_chunk(
                 p, t, c, s, cfg, gather_width=gw, bounded=bounded),
             static_argnums=(4,))
+        # the K-step decode megatick: sampling runs INSIDE the scan
+        # (greedy argmax, or the seeded batch sampler whose keys fold
+        # (seed, rid, token index) with the scan step offsetting each
+        # slot's token index), so only (B, K) token ids come back to
+        # host. K is a static arg bucketed like gather_width.
+        base_key = self._base_key
+        in_scan = sampler != "greedy"
+
+        def _megatick_fn(p, t, bud, s, rids, st0, tmp, tk, K, gw):
+            if in_scan:
+                def sample_fn(lg, j):
+                    return sampler_lib.sample_batch(lg, base_key, rids,
+                                                    st0 + j, tmp, tk)
+            else:
+                def sample_fn(lg, j):
+                    return sampler_lib.greedy(lg)
+            return lm.decode_multi(p, t, s, cfg, steps=K, budgets=bud,
+                                   sample_fn=sample_fn, gather_width=gw,
+                                   bounded=bounded)
+
+        self._stepK = jax.jit(_megatick_fn, static_argnums=(8, 9))
         self._sample = jax.jit(sampler_lib.sample_batch)
+        self._greedy = jax.jit(sampler_lib.greedy)
 
     # ------------------------------------------------------------- queueing
     def submit(self, req: Request, at_tick: int | None = None):
@@ -313,6 +394,16 @@ class Engine:
         # first say on it again next tick via select_admissions
         self.queue.appendleft(victim)
 
+    def _retire(self, slot: int, req: Request, now: float, finished):
+        """Retire a finished request: shared by the single-step and
+        megatick paths so the decode_steps=1 vs K>1 identity the gates
+        rely on cannot drift through one-sided edits."""
+        req.done = True
+        req.finished_t = now
+        finished.append(req)
+        del self.active[slot]
+        self.pool.free(slot)
+
     # ----------------------------------------------------------- scheduling
     def tick(self) -> list[Request]:
         """One scheduler step. Returns requests that finished this tick."""
@@ -325,10 +416,14 @@ class Engine:
         self.tick_count += 1
         if not self.active:
             return []
+        if (self.decode_steps > 1
+                and not any(r.prefilling for r in self.active.values())):
+            return self._megatick()
         C = self.prefill_chunk
         tok = np.zeros((self.batch, C), np.int32)
         cnt = np.zeros((self.batch,), np.int32)
         emit = np.zeros((self.batch,), bool)
+        any_prefill = False
         for slot, req in self.active.items():
             want = (min(C, len(req.eff_prompt) - req.consumed)
                     if req.prefilling else 1)
@@ -338,6 +433,7 @@ class Engine:
             if n == 0:
                 continue                    # stalled: no KV block free
             if req.prefilling:
+                any_prefill = True
                 tok[slot, :n] = req.eff_prompt[req.consumed:req.consumed + n]
                 cnt[slot] = n
                 emit[slot] = req.consumed + n >= len(req.eff_prompt)
@@ -360,6 +456,8 @@ class Engine:
         # position the jitted step will read or write
         gw = self.pool.gather_width()
         self.dispatch_count += 1
+        if not any_prefill:
+            self.decode_dispatch_count += 1
         if cmax <= 1:
             logits, self.pool.state = self._step1(
                 self.params, jnp.asarray(tok[:, :1]),
@@ -368,10 +466,7 @@ class Engine:
             # bucket the scan length to the next power of two so ticks
             # with little prefill left don't pay the full chunk, while
             # compile count stays bounded at log2(prefill_chunk)
-            cw = 2
-            while cw < cmax:
-                cw *= 2
-            cw = min(cw, C)
+            cw = pow2_bucket(cmax, C)
             logits, self.pool.state = self._stepC(
                 self.params, jnp.asarray(tok[:, :cw]), jnp.asarray(cnt),
                 self.pool.state, gw)
@@ -403,15 +498,82 @@ class Engine:
                 # the next output token (the first one arrives on the
                 # tick that completes the prefill)
                 req.out_tokens.append(int(nxt[slot, 0]))
+                if not any_prefill:
+                    self.decode_token_count += 1
                 if len(req.out_tokens) == 1:
                     req.first_token_t = now
             if (len(req.out_tokens) >= req.max_new_tokens
                     or cache_full):
-                req.done = True
-                req.finished_t = now
-                finished.append(req)
-                del self.active[slot]
-                self.pool.free(slot)
+                self._retire(slot, req, now, finished)
+        return finished
+
+    def _megatick(self) -> list[Request]:
+        """One fused K-step decode dispatch (``lm.decode_multi``): runs
+        only when every active slot is decoding. Each slot's step budget
+        is clamped by its remaining ``max_new_tokens``, its ``max_len``
+        headroom, and the blocks ``CachePool.reserve`` can pre-allocate
+        for the whole megatick; a slot past its budget freezes
+        byte-identically inside the scan. Sampling is device-resident —
+        the host gets back (B, K) token ids, not K logit tensors."""
+        K = self.decode_steps
+        tok = np.zeros((self.batch, 1), np.int32)
+        budgets = np.zeros((self.batch,), np.int32)
+        rids = np.zeros((self.batch,), np.int32)
+        steps0 = np.zeros((self.batch,), np.int32)
+        temps = np.zeros((self.batch,), np.float32)
+        topks = np.zeros((self.batch,), np.int32)
+        for slot, req in self.active.items():
+            # a live decode slot always wants >= 1 step (it would have
+            # been retired last tick otherwise); the reservation may
+            # still return 0 under pool pressure -> the slot stalls
+            want = min(K, req.max_new_tokens - len(req.out_tokens),
+                       self.max_len - 1 - int(self.pool.lengths[slot]))
+            budgets[slot] = self.pool.reserve(slot, want)
+            tok[slot, 0] = (req.out_tokens[-1] if req.out_tokens
+                            else req.eff_prompt[-1])
+            rids[slot] = req.rid
+            steps0[slot] = len(req.out_tokens)
+            temps[slot] = req.temp
+            topks[slot] = req.top_k
+        kmax = int(budgets.max(initial=0))
+        if kmax == 0:
+            # every slot stalled on block availability at the megatick
+            # boundary: preempt the policy's victim, as the single-step
+            # path does
+            self._preempt_one()
+            return []
+        self.pool.sync()
+        # gather width AFTER the reserve() loop: the static slice must
+        # cover every block the whole megatick writes
+        gw = self.pool.gather_width()
+        # bucket the scan length to the next power of two (clamped at
+        # K) so ragged tail megaticks don't pay the full K while jit
+        # specializations stay bounded at log2(decode_steps)
+        kb = pow2_bucket(kmax, K)
+        self.dispatch_count += 1
+        self.decode_dispatch_count += 1
+        out, self.pool.state = self._stepK(
+            self.params, jnp.asarray(tok), jnp.asarray(budgets),
+            self.pool.state, jnp.asarray(rids), jnp.asarray(steps0),
+            jnp.asarray(temps), jnp.asarray(topks), kb, gw)
+        out = np.asarray(out)
+
+        finished = []
+        now = time.time()
+        for slot, req in list(self.active.items()):
+            n = int(budgets[slot])
+            if n == 0:
+                continue
+            self.pool.advance(slot, n)
+            req.out_tokens.extend(int(t) for t in out[slot, :n])
+            self.decode_token_count += n
+            if self.cfg.sliding_window is not None:
+                self.pool.reclaim_out_of_window(slot,
+                                                self.cfg.sliding_window)
+            cache_full = int(self.pool.lengths[slot]) + 1 >= self.max_len
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or cache_full):
+                self._retire(slot, req, now, finished)
         return finished
 
     def _next_tokens(self, logits, emit):
@@ -420,7 +582,9 @@ class Engine:
         (seed, rid, token index) into a per-slot key so outputs are
         reproducible and independent of batch composition."""
         if self.sampler == "greedy":
-            return np.asarray(sampler_lib.greedy(logits))
+            # jitted like self._sample: the un-jitted call paid a
+            # trace-free op-by-op dispatch every single-step tick
+            return np.asarray(self._greedy(logits))
         rids = np.zeros((self.batch,), np.int32)
         steps = np.zeros((self.batch,), np.int32)
         temps = np.zeros((self.batch,), np.float32)
@@ -461,6 +625,15 @@ class Engine:
             "new_tokens": toks,
             "ticks": self.tick_count,
             "dispatches": self.dispatch_count,
+            "decode_steps": self.decode_steps,
+            "decode_dispatches": self.decode_dispatch_count,
+            "decode_tokens": self.decode_token_count,
+            # the megatick win, structurally: tokens produced per pure-
+            # decode dispatch (>= decode_steps at steady state; the CI
+            # gate asserts dispatches-per-token <= 1/K from these)
+            "tokens_per_dispatch": round(
+                self.decode_token_count
+                / max(self.decode_dispatch_count, 1), 2),
             "scheduler": self.policy.name,
             "preemptions": self.preempt_count,
             **latency_summary(ttfts, "ttft"),

@@ -76,6 +76,17 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
     return -(-n_tokens // block_size)
 
 
+def pow2_bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= max(n, 1), clamped to ``cap``: the one
+    bucketing rule for every STATIC jit width/length in the serving
+    layer (paged gather width, prefill scan length, megatick scan
+    length), bounding jit specializations at log2(cap)."""
+    w = 1
+    while w < max(n, 1):
+        w *= 2
+    return min(w, cap)
+
+
 # eq/repr off: the pool holds the full params pytree and the decode
 # state — the generated __eq__ would crash on array truthiness and
 # __repr__ would stringify the whole model
@@ -215,11 +226,7 @@ class CachePool:
         power-of-two padding bounds that at log2(max_blocks)
         specializations while the scored width tracks the live
         high-water mark instead of the worst case."""
-        need = max(1, self.max_blocks_in_use)
-        w = 1
-        while w < need:
-            w *= 2
-        return min(w, self.max_blocks)
+        return pow2_bucket(self.max_blocks_in_use, self.max_blocks)
 
     @property
     def blocks_resident(self) -> int:
@@ -384,6 +391,19 @@ class CachePool:
             ok += 1
         self.blocks_hwm = max(self.blocks_hwm, self.blocks_in_use)
         return ok
+
+    def reserve(self, slot: int, k: int) -> int:
+        """Megatick pre-allocation: make the blocks covering the slot's
+        next ``k`` decode positions writable BEFORE the fused K-step
+        program runs (allocating at chunk boundaries, copy-on-writing
+        shared/registered blocks — same mechanics as :meth:`writable`).
+        Returns the slot's megatick step budget: how many of the ``k``
+        steps the pool can back. A short budget freezes the slot
+        mid-megatick (the engine's per-slot ``budgets`` mask), it never
+        corrupts memory — the jitted scan only writes positions the
+        reservation covered. 0 means the slot must stall this megatick
+        (the engine preempts a victim if every slot stalls)."""
+        return self.writable(slot, k)
 
     def free(self, slot: int):
         """Release the slot. Its private blocks return to the free list;

@@ -5,6 +5,15 @@
 samples the whole batch with *per-slot* PRNG keys and per-slot
 ``temp``/``top_k`` (a ``temp`` of 0 degrades that row to greedy), so
 heterogeneous requests share one dispatch.
+
+Both ``greedy`` and ``sample_batch`` are pure jax functions, so they
+run either as the engine's per-tick host-side sample (jitted on their
+own) or DEVICE-RESIDENT inside the decode megatick scan
+(``lm.decode_multi``): there the engine's ``sample_fn`` closure calls
+them in-graph on each step's logits, with the scan index offsetting
+each slot's token-index key fold — the (seed, rid, token index) key
+contract is identical in both placements, which is what makes K-step
+megaticks token-identical to single-step scheduling.
 """
 from __future__ import annotations
 
@@ -34,7 +43,10 @@ def sample_batch(logits, key, rids, steps, temps, top_ks):
     logits: (B, 1, V); key: base PRNG key; rids/steps: (B,) int32 —
     each row's key is fold_in(fold_in(key, rid), step) IN-GRAPH, so a
     request's stream depends only on (seed, request id, token index),
-    never on scheduling, and the host pays one dispatch per tick;
+    never on scheduling, and the host pays one dispatch per tick (or
+    none: inside a megatick scan ``steps`` arrives as the slot's
+    emitted-token count plus the scan index, and the fold runs
+    device-resident);
     temps: (B,) fp32; top_ks: (B,) int32 (0 = no truncation; clamped to
     V). Rows with temp <= 0 are greedy. Returns (B, 1) int32.
     """

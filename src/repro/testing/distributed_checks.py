@@ -696,6 +696,82 @@ def check_engine_bounded_token_identity():
             assert wstreams[True] == wstreams[False], (mode, wstreams)
 
 
+def _engine_megatick_case(mode, *, samplers=("greedy", "temperature"),
+                          window=True):
+    """Shared body for the megatick identity checks: K=8 megatick
+    engines vs the K=1 single-step anchor under one fusion mode —
+    through preemption (pool too small for combined growth) and,
+    optionally, sliding-window reclaim holes punched at megatick
+    boundaries."""
+    from repro.configs import get_config, smoke_config
+    from repro.distributed import context as dctx
+    from repro.distributed.sharding_rules import Rules
+    from repro.models import lm
+    from repro.serving.engine import Engine, Request
+    cfg = smoke_config(get_config("llama3-8b")).replace(
+        n_layers=2, dtype=jnp.float32)
+    mesh = _mesh(1, 4)
+    rng = np.random.default_rng(13)
+    prompts = [[int(t) for t in rng.integers(1, cfg.vocab_size, 9)]
+               for _ in range(2)]
+    wprompt = [int(t) for t in rng.integers(1, cfg.vocab_size, 30)]
+    ctx = dctx.make_context(mesh, fusion_mode=mode, rules=Rules(mesh))
+    with dctx.use(ctx), mesh:
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        for sampler in samplers:
+            streams = {}
+            for K in (1, 8):
+                # 9 + 12 tokens -> 3 blocks/slot, 4-block pool: the
+                # engines must preempt, and the megatick engine must
+                # do it at a megatick boundary
+                eng = Engine(params, cfg, batch=2, max_len=64,
+                             prefill_chunk=8, block_size=8, n_blocks=4,
+                             sampler=sampler, seed=7, decode_steps=K)
+                for i, p in enumerate(prompts):
+                    eng.submit(Request(rid=i, prompt=list(p),
+                                       max_new_tokens=12, temp=1.0))
+                done = eng.run()
+                assert len(done) == 2, (mode, sampler, K, len(done))
+                assert eng.preempt_count >= 1, (mode, sampler, K)
+                streams[K] = {r.rid: r.out_tokens for r in done}
+            assert streams[1] == streams[8], (mode, sampler, streams)
+        if not window:
+            return
+        # sliding-window reclaim holes punched at megatick boundaries
+        cfgw = cfg.replace(sliding_window=16)
+        paramsw = lm.init_params(jax.random.PRNGKey(0), cfgw)
+        wstreams = {}
+        for K in (1, 8):
+            eng = Engine(paramsw, cfgw, batch=2, max_len=64,
+                         prefill_chunk=8, block_size=8, decode_steps=K)
+            eng.submit(Request(rid=0, prompt=list(wprompt),
+                               max_new_tokens=12))
+            done = eng.run()
+            assert eng.pool.blocks_reclaimed >= 3, (mode, K)
+            wstreams[K] = done[0].out_tokens
+        assert wstreams[1] == wstreams[8], (mode, wstreams)
+
+
+def check_engine_megatick_token_identity():
+    """Megatick tentpole oracle: ``Engine(decode_steps=8)`` — one fused
+    jitted program per 8 decode steps with DEVICE-RESIDENT sampling —
+    must decode TOKEN-IDENTICAL streams to the single-step engine
+    under bsp and ring, for greedy and the seeded temperature sampler,
+    including through preemption and sliding-window reclaim. The
+    single-step engine is the PR-1..4 regression anchor, so identity
+    to it carries identity to the solo-run reference."""
+    for mode in ("bsp", "ring"):
+        _engine_megatick_case(mode)
+
+
+def check_engine_megatick_bsp_small():
+    """Per-PR promotable subset of the megatick identity check: bsp
+    only, greedy only, no window leg — small enough for the fast
+    tier's 8-fake-device subprocess (the nightly battery runs the full
+    mode x sampler x window matrix above)."""
+    _engine_megatick_case("bsp", samplers=("greedy",), window=False)
+
+
 # keep LAST so every check_* above is collected (a mid-file listing
 # silently dropped later checks from the battery)
 ALL_CHECKS = [v for k, v in sorted(globals().items())
