@@ -1,0 +1,44 @@
+"""taxlint — a Three-Taxes static analyzer for the serving hot path.
+
+The paper's three performance taxes (bulk-synchronous barriers,
+inter-kernel locality loss, kernel-launch overhead) creep back in
+silently: one stray host round-trip in a decode tick, one unbucketed
+Python int flowing into a ``static_argnums`` jit parameter, one
+blocking collective inside a scan body, and the dispatch/launch bounds
+the serving PRs established quietly rot until a bench gate fails.
+
+``taxlint`` encodes those invariants as stdlib-``ast`` lint rules that
+run on every PR with zero dependencies beyond the Python standard
+library (it never imports jax — CI runs it before any pip install):
+
+* ``TAX001`` — host device sync in a decode/tick hot path (launch-gap
+  tax: ``np.asarray``, ``.item()``, ``jax.device_get``,
+  ``int()/float()/bool()`` on jitted outputs).
+* ``TAX002`` — recompile hazard: a raw Python int flowing into a
+  static jit parameter without passing through ``pow2_bucket`` /
+  ``CachePool.gather_width``.
+* ``DIST001`` — collective axis names not bound by the enclosing
+  ``shard_map``; ``ppermute`` perms that are statically not a
+  bijection.
+* ``DIST002`` — blocking collective inside a ``lax.scan`` /
+  ``fori_loop`` / ``while_loop`` body (the literal BSP-tax code smell).
+* ``PL001``  — Pallas hygiene: hardcoded ``interpret=True``, inline
+  backend probes (use ``jax_compat.default_interpret()``), BlockSpec
+  tiles that don't divide the output shape.
+
+CLI: ``python -m repro.analysis [--format text|json] [--output FILE]
+[paths...]`` — exit 0 when clean, 1 on findings, 2 on usage errors.
+Per-line suppressions carry a MANDATORY justification: a ``#`` comment
+reading ``taxlint: ignore[RULE] why this is safe`` (same line, or a
+standalone comment on the line above). An unjustified suppression is
+itself a finding (``SUP001``), as is an unused one (``SUP002``).
+(The scanner is lexical, so this docstring spells the pattern without
+the leading hash.)
+
+Rule catalog and suppression policy: ``docs/analysis.md``.
+"""
+from repro.analysis.core import (Finding, Rule, UsageError, all_rules,
+                                 analyze_file, analyze_paths, register)
+
+__all__ = ["Finding", "Rule", "UsageError", "all_rules", "analyze_file",
+           "analyze_paths", "register"]

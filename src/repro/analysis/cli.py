@@ -1,0 +1,81 @@
+"""taxlint CLI: ``python -m repro.analysis [options] [paths...]``.
+
+Exit-code contract (stable — CI and tests depend on it):
+
+* ``0`` — analyzed cleanly: zero unsuppressed findings (justified
+  suppressions are fine and inventoried in the report);
+* ``1`` — at least one unsuppressed finding (including PARSE errors in
+  analyzed files and SUP001/SUP002 suppression-hygiene findings);
+* ``2`` — usage error: unknown flag, nonexistent path.
+
+``--output FILE`` always writes the full JSON report (findings AND the
+suppression inventory) regardless of ``--format``, so CI can gate on
+the exit code while archiving machine-readable findings as an
+artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import core
+
+
+def _list_rules() -> str:
+    lines = ["taxlint rules (details: docs/analysis.md):", ""]
+    for rule in core.all_rules():
+        lines.append(f"  {rule.id:8s} {rule.title}")
+        lines.append(f"  {'':8s}   guards: {rule.tax}")
+    lines.append("")
+    for rid, desc in sorted(core.META_RULES.items()):
+        lines.append(f"  {rid:8s} {desc} (meta; not suppressible)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="taxlint: Three-Taxes static analyzer "
+                    "(host syncs, recompile hazards, collective safety, "
+                    "Pallas hygiene). Stdlib-only; never imports jax.")
+    parser.add_argument(
+        "paths", nargs="*", default=["src"],
+        help="files or directories to analyze (default: src)")
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text",
+        help="stdout report format (default: text)")
+    parser.add_argument(
+        "--output", metavar="FILE",
+        help="also write the JSON report to FILE (written on both "
+             "clean and failing runs, for CI artifacts)")
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule catalog and exit 0")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    try:
+        findings, suppressed, nfiles = core.analyze_paths(args.paths)
+    except core.UsageError as e:
+        print(f"taxlint: error: {e}", file=sys.stderr)
+        return 2
+
+    report = core.to_report(findings, suppressed, nfiles, args.paths)
+    if args.output:
+        Path(args.output).write_text(json.dumps(report, indent=2) + "\n")
+
+    if args.format == "json":
+        print(json.dumps(report, indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        status = "clean" if not findings else "FAILED"
+        print(f"taxlint: {status} — {len(findings)} finding(s), "
+              f"{len(suppressed)} suppressed (justified), "
+              f"{nfiles} file(s)")
+    return 1 if findings else 0

@@ -1,0 +1,662 @@
+"""taxlint rules: the three taxes, encoded as stdlib-ast checks.
+
+Every rule is deliberately CONSERVATIVE: it fires only on patterns it
+can prove locally (one file, lexical scope, literal values), because a
+blocking lint gate that cries wolf gets suppressed wholesale. What a
+rule cannot prove it lets pass — the runtime oracles (token-identity
+batteries, structural bench gates) stay the backstop for the rest.
+
+Shared helpers live at the top; each rule documents the exact pattern
+it flags, the tax it guards, and the sanctioned alternative.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import FileContext, Rule, register
+
+# ------------------------------------------------------------ ast helpers
+def dotted(node) -> list[str] | None:
+    """['jax', 'jit'] for ``jax.jit``; ['np', 'asarray'] for
+    ``np.asarray``; ['f'] for a bare name; None for anything else."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+def call_parts(call: ast.Call) -> list[str]:
+    return dotted(call.func) or []
+
+
+def keyword(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def const_int_tuple(node) -> tuple[int, ...] | None:
+    """(1, 2, 3) for a tuple/list of int literals, else None."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    vals = []
+    for e in node.elts:
+        if isinstance(e, ast.Constant) and isinstance(e.value, int) \
+                and not isinstance(e.value, bool):
+            vals.append(e.value)
+        else:
+            return None
+    return tuple(vals)
+
+
+def function_defs(tree) -> dict[str, ast.FunctionDef]:
+    """Every def in the file by name (innermost wins on collision —
+    good enough for resolving locally-defined loop/shard_map bodies)."""
+    defs: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+    return defs
+
+
+def resolve_body(arg, defs):
+    """A callable argument as an inspectable node: a lambda, a local
+    def referenced by name, or either wrapped in functools.partial."""
+    if isinstance(arg, ast.Lambda):
+        return arg
+    if isinstance(arg, ast.Name):
+        return defs.get(arg.id)
+    if isinstance(arg, ast.Call) and call_parts(arg)[-1:] == ["partial"] \
+            and arg.args:
+        return resolve_body(arg.args[0], defs)
+    return None
+
+
+def jit_static_spec(call: ast.Call) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """(static positions, static names) declared on a jax.jit call."""
+    nums: tuple[int, ...] = ()
+    names: list[str] = []
+    kw = keyword(call, "static_argnums")
+    if isinstance(kw, ast.Constant) and isinstance(kw.value, int):
+        nums = (kw.value,)
+    else:
+        nums = const_int_tuple(kw) or ()
+    kw = keyword(call, "static_argnames")
+    if isinstance(kw, ast.Constant) and isinstance(kw.value, str):
+        names = [kw.value]
+    elif isinstance(kw, (ast.Tuple, ast.List)):
+        names = [e.value for e in kw.elts
+                 if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return nums, tuple(names)
+
+
+def jit_bound_names(tree) -> set[str]:
+    """Names bound to jitted callables anywhere in the file:
+    ``self.N = jax.jit(...)`` / ``N = jax.jit(...)`` assignments and
+    defs decorated with ``jax.jit`` / ``functools.partial(jax.jit,
+    ...)``. Calls through these names dispatch a compiled program and
+    return device arrays."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and call_parts(node.value)[-1:] == ["jit"]:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out.add(tgt.id)
+                elif isinstance(tgt, ast.Attribute):
+                    out.add(tgt.attr)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                parts = dotted(dec) or []
+                if parts[-1:] == ["jit"]:
+                    out.add(node.name)
+                elif isinstance(dec, ast.Call):
+                    dparts = call_parts(dec)
+                    if dparts[-1:] == ["jit"] or (
+                            dparts[-1:] == ["partial"] and dec.args
+                            and (dotted(dec.args[0]) or [])[-1:] == ["jit"]):
+                        out.add(node.name)
+    return out
+
+
+def assignments_in(fn) -> list[tuple[int, list[str], ast.AST]]:
+    """(line, [target names], rhs) for every assignment in a function,
+    in source order — the cheap flow-sensitivity the taint rules use."""
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            names = []
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    names.append(tgt.id)
+                elif isinstance(tgt, (ast.Tuple, ast.List)):
+                    names.extend(e.id for e in tgt.elts
+                                 if isinstance(e, ast.Name))
+            out.append((node.lineno, names, node.value))
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            tgt = node.target
+            if isinstance(tgt, ast.Name):
+                out.append((node.lineno, [tgt.id], node.value))
+    return sorted(out, key=lambda t: t[0])
+
+
+class _Provenance:
+    """Last-assignment-before-line lookup for names in one function."""
+
+    def __init__(self, fn):
+        self._hist: dict[str, list[tuple[int, ast.AST]]] = {}
+        for line, names, rhs in assignments_in(fn):
+            for n in names:
+                self._hist.setdefault(n, []).append((line, rhs))
+
+    def rhs_at(self, name: str, line: int):
+        """RHS of the last assignment to ``name`` strictly before
+        ``line`` (same-line assignments count: x = f(x) sees f's
+        result). None if never assigned locally (param, closure)."""
+        best = None
+        for ln, rhs in self._hist.get(name, ()):
+            if ln <= line:
+                best = rhs
+            else:
+                break
+        return best
+
+
+# ---------------------------------------------------------------- TAX001
+# hot-path scoping: (path suffix) -> function names whose bodies are the
+# per-tick dispatch path. Everything outside these stays unflagged —
+# host syncs at init/metrics time are free.
+HOT_FUNCTIONS = {
+    "serving/engine.py": frozenset(
+        {"tick", "_tick", "_megatick", "_next_tokens", "run"}),
+    "models/lm.py": frozenset(
+        {"decode_step", "decode_chunk", "decode_multi"}),
+}
+
+_SYNC_NP_MODULES = {"np", "numpy", "onp"}
+
+
+@register
+class HostSyncInHotPath(Rule):
+    """TAX001 — host device sync in a decode/tick hot path.
+
+    Guards the Kernel Launch Overhead tax: every host round-trip in the
+    tick path is a launch gap the paper's megatick machinery exists to
+    eliminate. Flags, inside the configured hot functions:
+
+    * ``np.asarray(...)`` / ``numpy.asarray(...)`` — blocks on the
+      device and copies to host;
+    * ``jax.device_get(...)`` and ``.block_until_ready()`` — explicit
+      syncs;
+    * ``.item()`` — scalar device->host sync;
+    * ``int()/float()/bool()`` applied to the result of a jitted call
+      (direct, or through a name assigned from one — reassigning the
+      name from anything else, e.g. ``out = np.asarray(out)``, clears
+      the taint: the sync already happened and was flagged there).
+
+    A legitimate once-per-dispatch sync (the (B, K) sampled-token
+    readback that drives Python-side scheduling) is suppressed with a
+    written justification; per-token syncs get eliminated instead.
+    """
+
+    id = "TAX001"
+    tax = "kernel-launch overhead (host round-trips in the tick path)"
+    title = "host device sync in a decode/tick hot path"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        hot = None
+        for suffix, fns in HOT_FUNCTIONS.items():
+            if ctx.matches(suffix):
+                hot = fns
+                break
+        if hot is None:
+            return
+        jitted = jit_bound_names(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in hot:
+                yield from self._check_fn(ctx, node, jitted)
+
+    def _is_jitted_call(self, node, jitted) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        parts = call_parts(node)
+        return bool(parts) and parts[-1] in jitted
+
+    def _check_fn(self, ctx, fn, jitted):
+        # taint: names holding un-synced jitted-call results
+        prov = _Provenance(fn)
+
+        def tainted(name: str, line: int) -> bool:
+            rhs = prov.rhs_at(name, line)
+            return rhs is not None and self._is_jitted_call(rhs, jitted)
+
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            parts = call_parts(node)
+            if parts and parts[-1] == "asarray" \
+                    and parts[-2:-1] and parts[-2] in _SYNC_NP_MODULES:
+                yield ctx.finding(
+                    self.id, node,
+                    "np.asarray in the tick hot path blocks on the "
+                    "device and copies to host — a launch gap per call; "
+                    "keep data device-resident or justify the one "
+                    "per-dispatch readback")
+            elif parts == ["jax", "device_get"]:
+                yield ctx.finding(
+                    self.id, node,
+                    "jax.device_get in the tick hot path is an explicit "
+                    "host sync — a launch gap per call")
+            elif parts and parts[-1] == "block_until_ready":
+                yield ctx.finding(
+                    self.id, node,
+                    ".block_until_ready() in the tick hot path "
+                    "serializes dispatch — a launch gap per call")
+            elif parts and parts[-1] == "item" and not node.args \
+                    and not node.keywords \
+                    and isinstance(node.func, ast.Attribute):
+                yield ctx.finding(
+                    self.id, node,
+                    ".item() in the tick hot path is a scalar "
+                    "device->host sync — a launch gap per call")
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in ("int", "float", "bool") \
+                    and len(node.args) == 1:
+                arg = node.args[0]
+                hit = self._is_jitted_call(arg, jitted)
+                if not hit:
+                    for sub in ast.walk(arg):
+                        if isinstance(sub, ast.Name) \
+                                and tainted(sub.id, node.lineno):
+                            hit = True
+                            break
+                if hit:
+                    yield ctx.finding(
+                        self.id, node,
+                        f"{node.func.id}() on a jitted output in the "
+                        f"tick hot path forces a scalar device->host "
+                        f"sync — a launch gap per call")
+
+
+# ---------------------------------------------------------------- TAX002
+_SANCTIONED_BUCKET_CALLS = {"pow2_bucket", "gather_width"}
+_HAZARD_BUILTINS = {"int", "max", "min", "len", "round", "abs", "sum"}
+_HAZARD_METHODS = {"max", "min", "item", "sum", "argmax"}
+
+
+@register
+class UnbucketedStaticJitArg(Rule):
+    """TAX002 — recompile hazard: a raw Python int flowing into a
+    static jit parameter without passing through ``pow2_bucket``.
+
+    Guards the compile-cache contract from the gather-width / megatick
+    PRs: every distinct value of a ``static_argnums`` /
+    ``static_argnames`` parameter is a fresh XLA compile, so data-
+    dependent ints (``int(x.max())``, lengths, arithmetic) must be
+    bucketed (``pow2_bucket`` / ``CachePool.gather_width()``) to bound
+    specializations at log2(cap).
+
+    Scope: jit bindings declared in the SAME file (``self._step =
+    jax.jit(fn, static_argnums=...)`` assignments, ``functools.partial
+    (jax.jit, static_argnames=...)`` decorators) and their local call
+    sites. A static argument that is a literal, an unknown name (a
+    parameter — the caller's problem), or a value already routed
+    through a bucketing call passes; a hazard expression — ``int()``,
+    arithmetic, ``max()/len()``, ``.max()/.item()`` — or a name whose
+    last local assignment was one, fires.
+    """
+
+    id = "TAX002"
+    tax = "kernel-launch overhead (recompiles on the dispatch path)"
+    title = "unbucketed Python int flows into a static jit parameter"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        statics: dict[str, tuple[tuple[int, ...], tuple[str, ...]]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call) \
+                    and call_parts(node.value)[-1:] == ["jit"]:
+                spec = jit_static_spec(node.value)
+                if spec != ((), ()):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            statics[tgt.id] = spec
+                        elif isinstance(tgt, ast.Attribute):
+                            statics[tgt.attr] = spec
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call):
+                        dparts = call_parts(dec)
+                        if dparts[-1:] == ["partial"] and dec.args \
+                                and (dotted(dec.args[0]) or [])[-1:] \
+                                == ["jit"]:
+                            spec = jit_static_spec(dec)
+                            if spec != ((), ()):
+                                statics[node.name] = spec
+        if not statics:
+            return
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            prov = _Provenance(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                parts = call_parts(node)
+                name = parts[-1] if parts else None
+                if name not in statics:
+                    continue
+                nums, names = statics[name]
+                for i in nums:
+                    if i < len(node.args):
+                        yield from self._classify(
+                            ctx, node.args[i], prov, node.lineno,
+                            f"static arg #{i} of {name}")
+                for kw in node.keywords:
+                    if kw.arg in names:
+                        yield from self._classify(
+                            ctx, kw.value, prov, node.lineno,
+                            f"static arg {kw.arg}= of {name}")
+
+    def _hazard(self, expr, prov, line, depth=0) -> bool:
+        if isinstance(expr, (ast.BinOp, ast.UnaryOp)):
+            return True
+        if isinstance(expr, ast.Call):
+            parts = call_parts(expr)
+            if parts and parts[-1] in _SANCTIONED_BUCKET_CALLS:
+                return False
+            if isinstance(expr.func, ast.Name) \
+                    and expr.func.id in _HAZARD_BUILTINS:
+                return True
+            if isinstance(expr.func, ast.Attribute) \
+                    and expr.func.attr in _HAZARD_METHODS:
+                return True
+            return False
+        if isinstance(expr, ast.Name) and depth < 4:
+            rhs = prov.rhs_at(expr.id, line)
+            if rhs is not None:
+                return self._hazard(rhs, prov, line, depth + 1)
+        return False
+
+    def _classify(self, ctx, expr, prov, line, where):
+        if self._hazard(expr, prov, line):
+            yield ctx.finding(
+                self.id, expr,
+                f"data-dependent Python int reaches {where} without "
+                f"pow2_bucket — every distinct value is a fresh XLA "
+                f"compile; bucket it (pow2_bucket / "
+                f"CachePool.gather_width) to bound specializations")
+
+
+# ---------------------------------------------------------------- DIST001
+_COLLECTIVE_AXIS_ARG = {
+    "psum": 1, "pmean": 1, "pmax": 1, "pmin": 1, "all_gather": 1,
+    "ppermute": 1, "all_to_all": 1, "psum_scatter": 1,
+    "axis_index": 0, "axis_size": 0,
+}
+
+
+@register
+class CollectiveAxisSafety(Rule):
+    """DIST001 — collective safety inside ``shard_map`` regions.
+
+    Two statically-provable contracts:
+
+    * a collective's LITERAL axis name inside a locally-defined
+      ``shard_map`` body must be one of the wrapper's literal
+      ``axis_names`` — an unbound axis is a trace-time error at best
+      and a silently-replicated reduction at worst;
+    * a ``ppermute`` perm given as a literal list of pairs must be a
+      bijection (no duplicate sources, no duplicate destinations) —
+      a non-bijective perm drops or double-delivers shards.
+
+    Axis names and perms built dynamically (closure parameters, list
+    comprehensions — the repo's normal style) are out of static reach
+    and pass.
+    """
+
+    id = "DIST001"
+    tax = "bulk-synchronous overlap (collectives must bind their axes)"
+    title = "unbound collective axis name / non-bijective ppermute perm"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        defs = function_defs(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            parts = call_parts(node)
+            if parts[-1:] == ["shard_map"]:
+                yield from self._check_region(ctx, node, defs)
+            if parts[-1:] == ["ppermute"]:
+                yield from self._check_perm(ctx, node)
+
+    def _axis_names(self, call) -> set[str] | None:
+        kw = keyword(call, "axis_names")
+        if isinstance(kw, (ast.Set, ast.Tuple, ast.List)):
+            names = set()
+            for e in kw.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    names.add(e.value)
+                else:
+                    return None          # dynamic element: unknowable
+            return names
+        return None
+
+    def _check_region(self, ctx, call, defs):
+        bound = self._axis_names(call)
+        if bound is None or not call.args:
+            return
+        body = resolve_body(call.args[0], defs)
+        if body is None:
+            return
+        for node in ast.walk(body):
+            if not isinstance(node, ast.Call):
+                continue
+            parts = call_parts(node)
+            name = parts[-1] if parts else None
+            if name not in _COLLECTIVE_AXIS_ARG:
+                continue
+            pos = _COLLECTIVE_AXIS_ARG[name]
+            axis = (node.args[pos] if len(node.args) > pos
+                    else keyword(node, "axis_name") or keyword(node, "axis"))
+            if isinstance(axis, ast.Constant) \
+                    and isinstance(axis.value, str) \
+                    and axis.value not in bound:
+                yield ctx.finding(
+                    self.id, node,
+                    f"collective {name}('{axis.value}') inside a "
+                    f"shard_map bound to axes {sorted(bound)} — the "
+                    f"axis is not manual here; bind it in axis_names "
+                    f"or fix the name")
+
+    def _check_perm(self, ctx, call):
+        perm = (call.args[2] if len(call.args) > 2
+                else keyword(call, "perm"))
+        if not isinstance(perm, (ast.List, ast.Tuple)):
+            return
+        pairs = []
+        for e in perm.elts:
+            if isinstance(e, (ast.Tuple, ast.List)):
+                pair = const_int_tuple(e)
+                if pair is None or len(pair) != 2:
+                    return               # dynamic pair: unknowable
+                pairs.append(pair)
+            else:
+                return
+        srcs = [p[0] for p in pairs]
+        dsts = [p[1] for p in pairs]
+        if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+            yield ctx.finding(
+                self.id, call,
+                f"ppermute perm {pairs} is not a bijection (duplicate "
+                f"source or destination) — shards would be dropped or "
+                f"double-delivered")
+
+
+# ---------------------------------------------------------------- DIST002
+_BLOCKING_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather",
+                         "all_to_all", "psum_scatter"}
+_LOOP_BODY_ARG = {"scan": 0, "fori_loop": 2, "while_loop": 1}
+
+
+@register
+class BlockingCollectiveInLoop(Rule):
+    """DIST002 — blocking collective inside a scan/loop body.
+
+    The literal BSP-tax code smell the paper targets: a ``psum`` /
+    ``all_gather`` in a ``lax.scan`` / ``fori_loop`` / ``while_loop``
+    body serializes Compute-Wait-Collective-Wait-Compute every
+    iteration. The sanctioned shapes are the pipelined ones — chunked
+    ``ppermute`` dataflow that overlaps the next iteration's compute
+    (``core.collective_matmul``, ``combine_ring``) — or a combine
+    hoisted out of the loop. A combine that IS deliberately per-
+    iteration (e.g. a debug oracle) gets a justified suppression.
+
+    ``ppermute`` itself is exempt: a permute in a loop body is the
+    pipelined pattern, not the tax.
+    """
+
+    id = "DIST002"
+    tax = "bulk-synchronous overlap (BSP barrier per loop iteration)"
+    title = "blocking collective inside a lax.scan/fori_loop/while_loop body"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        defs = function_defs(ctx.tree)
+        lax_names = self._lax_imports(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            parts = call_parts(node)
+            name = parts[-1] if parts else None
+            if name not in _LOOP_BODY_ARG:
+                continue
+            # attribute form must go through a lax module; a bare name
+            # must have been imported from jax.lax — keeps foreign
+            # .scan() methods out
+            if len(parts) > 1 and "lax" not in parts[:-1]:
+                continue
+            if len(parts) == 1 and name not in lax_names:
+                continue
+            idx = _LOOP_BODY_ARG[name]
+            if len(node.args) <= idx:
+                continue
+            body = resolve_body(node.args[idx], defs)
+            if body is None:
+                continue
+            for sub in ast.walk(body):
+                if isinstance(sub, ast.Call):
+                    sparts = call_parts(sub)
+                    if sparts and sparts[-1] in _BLOCKING_COLLECTIVES:
+                        yield ctx.finding(
+                            self.id, sub,
+                            f"blocking collective {sparts[-1]} inside a "
+                            f"{name} body pays the BSP barrier every "
+                            f"iteration — pipeline it as chunked "
+                            f"ppermute dataflow or hoist it out of the "
+                            f"loop")
+
+    def _lax_imports(self, tree) -> set[str]:
+        names: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "jax.lax":
+                names.update(a.asname or a.name for a in node.names)
+        return names
+
+
+# ----------------------------------------------------------------- PL001
+# the ONE sanctioned backend probe lives here; everywhere else must call
+# the helper so interpret defaults cannot drift apart again
+_PROBE_HOME = "core/jax_compat.py"
+
+
+@register
+class PallasHygiene(Rule):
+    """PL001 — Pallas call hygiene.
+
+    * ``pl.pallas_call(..., interpret=True)`` with a LITERAL True: an
+      interpret-mode kernel hardcoded into the tree never exercises the
+      Mosaic lowering and silently ships interpreter semantics to TPU.
+      The sanctioned default is ``jax_compat.default_interpret()``
+      threaded through ``jax_compat.pallas_interpret(...)``.
+    * inline ``jax.default_backend() == "cpu"`` probes anywhere outside
+      ``core/jax_compat.py``: the thrice-copied default this repo
+      actually shipped — one copy per kernel file — is exactly how
+      interpret policies drift; call ``jax_compat.default_interpret()``.
+    * literal BlockSpec tiles on ``out_specs`` that do not divide a
+      literal ``out_shape``: a partial trailing tile silently pads or
+      traps depending on backend. (Grid/index-map consistency is NOT
+      checked — index maps are out of static reach.)
+    """
+
+    id = "PL001"
+    tax = "inter-kernel locality (fused-kernel hygiene)"
+    title = "Pallas hygiene: hardcoded interpret / inline probe / bad tile"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        probe_ok = ctx.matches(_PROBE_HOME)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Compare) and not probe_ok:
+                yield from self._check_probe(ctx, node)
+            if isinstance(node, ast.Call) \
+                    and call_parts(node)[-1:] == ["pallas_call"]:
+                yield from self._check_call(ctx, node)
+
+    def _check_probe(self, ctx, node):
+        sides = [node.left] + list(node.comparators)
+        has_probe = any(
+            isinstance(s, ast.Call)
+            and call_parts(s)[-1:] == ["default_backend"] for s in sides)
+        has_cpu = any(isinstance(s, ast.Constant) and s.value == "cpu"
+                      for s in sides)
+        if has_probe and has_cpu:
+            yield ctx.finding(
+                self.id, node,
+                'inline jax.default_backend() == "cpu" probe — use '
+                "jax_compat.default_interpret(), the one sanctioned "
+                "interpret default, so kernel files cannot drift apart")
+
+    def _check_call(self, ctx, call):
+        interp = keyword(call, "interpret")
+        if isinstance(interp, ast.Constant) and interp.value is True:
+            yield ctx.finding(
+                self.id, interp,
+                "hardcoded interpret=True on pallas_call never "
+                "exercises the Mosaic lowering — thread "
+                "jax_compat.pallas_interpret(jax_compat."
+                "default_interpret()) or a caller-supplied flag")
+        shape = self._out_shape(call)
+        if shape is None:
+            return
+        out_specs = keyword(call, "out_specs")
+        if isinstance(out_specs, ast.Call) \
+                and call_parts(out_specs)[-1:] == ["BlockSpec"] \
+                and out_specs.args:
+            tile = const_int_tuple(out_specs.args[0])
+            if tile is not None and len(tile) == len(shape):
+                for d, (t, s) in enumerate(zip(tile, shape)):
+                    if t == 0 or s % t != 0:
+                        yield ctx.finding(
+                            self.id, out_specs,
+                            f"out_specs BlockSpec tile {tile} does not "
+                            f"divide out_shape {shape} on dim {d} — a "
+                            f"partial trailing tile pads or traps "
+                            f"depending on backend")
+
+    def _out_shape(self, call) -> tuple[int, ...] | None:
+        out_shape = keyword(call, "out_shape")
+        if isinstance(out_shape, ast.Call) \
+                and call_parts(out_shape)[-1:] == ["ShapeDtypeStruct"] \
+                and out_shape.args:
+            return const_int_tuple(out_shape.args[0])
+        return None
+
+
+# re-exported for tests / docs tooling
+from repro.analysis.core import Finding  # noqa: E402,F401

@@ -61,6 +61,19 @@ def axis_size(axis) -> int:
     return lax.psum(1, axis)
 
 
+def default_interpret() -> bool:
+    """Default for the Pallas kernels' ``interpret=`` parameter:
+    interpret on CPU backends (CI and dev boxes run the kernels through
+    the Pallas TPU interpreter), compile everywhere else.
+
+    This is the ONE sanctioned backend probe — taxlint rule PL001 flags
+    inline ``jax.default_backend() == "cpu"`` comparisons outside this
+    module, so the default can never again be copy-pasted into each
+    kernel file and drift apart.
+    """
+    return jax.default_backend() == "cpu"
+
+
 def pallas_interpret(interpret: bool):
     """Value for ``pl.pallas_call(interpret=...)``: the TPU-interpreter
     params object where available (eager DMA so ring kernels make

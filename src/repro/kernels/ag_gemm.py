@@ -140,7 +140,7 @@ def ag_gemm_fused(a_shard, b_full, *, axis: str, bn: int = 256,
             f"128-multiple or use the XLA ring fallback")
     nn = N // bn
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = jax_compat.default_interpret()
 
     return pl.pallas_call(
         functools.partial(

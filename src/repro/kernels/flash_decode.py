@@ -283,7 +283,7 @@ def flash_decode_paged_fused(q, k_pool, v_pool, cur_len, tables, *,
     """
     B, H, D = q.shape
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = jax_compat.default_interpret()
     bs = k_pool.shape[1]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -331,7 +331,7 @@ def flash_decode_fused(q, k_shard, v_shard, cur_len, *, axis: str, W: int,
     blk = min(blk, S_loc)
     assert S_loc % blk == 0
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = jax_compat.default_interpret()
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

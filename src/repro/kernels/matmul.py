@@ -41,7 +41,7 @@ def matmul(a, b, *, bm: int = 256, bk: int = 512, bn: int = 256,
     assert M % bm == 0 and K % bk == 0 and N % bn == 0, (M, K, N, bm, bk, bn)
     nm, nk, nn = M // bm, K // bk, N // bn
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = jax_compat.default_interpret()
     grid = (nm, nn, nk)
     return pl.pallas_call(
         functools.partial(_mm_kernel, nk=nk),

@@ -556,6 +556,9 @@ class Engine:
             self.params, jnp.asarray(tok), jnp.asarray(budgets),
             self.pool.state, jnp.asarray(rids), jnp.asarray(steps0),
             jnp.asarray(temps), jnp.asarray(topks), kb, gw)
+        # taxlint: ignore[TAX001] the megatick's ONE designed sync: (B, K)
+        # token ids — not K logit tensors — come back to drive Python-side
+        # scheduling; amortized over K tokens, this IS the 1/K bound
         out = np.asarray(out)
 
         finished = []
@@ -584,6 +587,9 @@ class Engine:
         if self.sampler == "greedy":
             # jitted like self._sample: the un-jitted call paid a
             # trace-free op-by-op dispatch every single-step tick
+            # taxlint: ignore[TAX001] single-step ticks need the sampled
+            # (B, 1) ids on host to retire/requeue; megaticks amortize this
+            # to once per K steps
             return np.asarray(self._greedy(logits))
         rids = np.zeros((self.batch,), np.int32)
         steps = np.zeros((self.batch,), np.int32)
@@ -596,6 +602,8 @@ class Engine:
             steps[slot] = len(req.out_tokens)
             temps[slot] = req.temp
             topks[slot] = req.top_k
+        # taxlint: ignore[TAX001] same designed once-per-dispatch readback
+        # as the greedy path: (B, 1) sampled ids, not the (B, V) logits
         return np.asarray(self._sample(logits, self._base_key,
                                        jnp.asarray(rids),
                                        jnp.asarray(steps),

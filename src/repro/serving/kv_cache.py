@@ -80,7 +80,30 @@ def pow2_bucket(n: int, cap: int) -> int:
     """Smallest power of two >= max(n, 1), clamped to ``cap``: the one
     bucketing rule for every STATIC jit width/length in the serving
     layer (paged gather width, prefill scan length, megatick scan
-    length), bounding jit specializations at log2(cap)."""
+    length), bounding jit specializations at log2(cap) + 1.
+
+    Edge-case contract (relied on by the engine's dispatch paths, and
+    what taxlint rule TAX002 sanctions as THE static-arg launderer):
+
+    * ``n <= 0`` -> 1 — an idle tick still compiles a width-1 program
+      rather than a degenerate width-0 one;
+    * ``n > cap`` -> ``cap`` — the cap is a hard ceiling (a table/scan
+      can never be wider than its allocation), so oversized demands
+      clamp instead of growing the specialization set;
+    * non-power-of-two ``cap`` (e.g. ``max_blocks`` after the pool's
+      model-axis rounding) is returned AS-IS when the clamp engages:
+      the top bucket is the exact capacity, not a padded power of two
+      that would index past it;
+    * monotone non-decreasing in ``n`` — a growing watermark can only
+      move forward through the bucket sequence 1, 2, 4, ..., cap.
+
+    ``cap < 1`` is a configuration bug (no jit program has width 0):
+    raise loudly instead of returning an unusable width.
+    """
+    if cap < 1:
+        raise ValueError(
+            f"pow2_bucket: cap must be >= 1, got {cap} — a static jit "
+            f"width/length bucket of zero can never be dispatched")
     w = 1
     while w < max(n, 1):
         w *= 2

@@ -25,7 +25,7 @@ from repro.configs import get_config, smoke_config
 from repro.core import flash_decode as fd
 from repro.models import lm
 from repro.serving.engine import Engine, Request
-from repro.serving.kv_cache import CachePool
+from repro.serving.kv_cache import CachePool, pow2_bucket
 from repro.testing.decode_reference import reference_generate
 from repro.testing.distributed_checks import _paged_hole_oracle
 
@@ -105,6 +105,42 @@ def test_slot_at_exact_gather_width():
         np.testing.assert_array_equal(np.asarray(ck), np.asarray(kp_ref))
         outs[width] = np.asarray(out)
     np.testing.assert_allclose(outs[4], outs[6], rtol=1e-6, atol=1e-6)
+
+
+def test_pow2_bucket_contract():
+    """Direct edge-case contract of the one static-arg bucketing rule
+    (every static jit width/length goes through it — taxlint TAX002
+    sanctions exactly this launderer)."""
+    # floor: idle/degenerate demands still compile a width-1 program
+    assert pow2_bucket(0, 16) == 1
+    assert pow2_bucket(-3, 16) == 1
+    assert pow2_bucket(1, 16) == 1
+    # interior: smallest power of two >= n
+    assert pow2_bucket(2, 16) == 2
+    assert pow2_bucket(5, 16) == 8
+    assert pow2_bucket(16, 16) == 16
+    # ceiling: demands beyond the cap clamp instead of specializing
+    assert pow2_bucket(17, 16) == 16
+    assert pow2_bucket(10 ** 9, 16) == 16
+    # non-pow2 cap is returned as-is when the clamp engages — the top
+    # bucket is the exact capacity, never a padded width past it
+    assert pow2_bucket(9, 12) == 12
+    assert pow2_bucket(3, 12) == 4
+    assert pow2_bucket(1, 1) == 1
+    assert pow2_bucket(7, 1) == 1
+    # monotone non-decreasing in n; bucket count bounded by log2(cap)+1
+    cap = 16
+    widths = [pow2_bucket(n, cap) for n in range(0, 40)]
+    assert widths == sorted(widths)
+    assert len(set(widths)) <= cap.bit_length()
+    # cap < 1 is a configuration bug: raise, don't return width 0
+    for bad_cap in (0, -1):
+        try:
+            pow2_bucket(4, bad_cap)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError(f"cap={bad_cap} must raise")
 
 
 def test_gather_width_watermark_and_buckets():
