@@ -1,4 +1,4 @@
-"""taxlint — a Three-Taxes static analyzer for the serving hot path.
+"""taxlint/taxprove — a Three-Taxes whole-program analyzer.
 
 The paper's three performance taxes (bulk-synchronous barriers,
 inter-kernel locality loss, kernel-launch overhead) creep back in
@@ -9,33 +9,49 @@ the serving PRs established quietly rot until a bench gate fails.
 
 ``taxlint`` encodes those invariants as stdlib-``ast`` lint rules that
 run on every PR with zero dependencies beyond the Python standard
-library (it never imports jax — CI runs it before any pip install):
+library (it never imports jax — CI runs it before any pip install).
+Since the taxprove upgrade the rules are WHOLE-PROGRAM: a module
+graph + call graph + jit-boundary model (``callgraph``) feeds
+interprocedural summaries (``dataflow``) and a collective-schedule
+simulator (``schedule``), so taint and budgets flow through helper
+calls and module boundaries instead of stopping at the file edge.
 
 * ``TAX001`` — host device sync in a decode/tick hot path (launch-gap
   tax: ``np.asarray``, ``.item()``, ``jax.device_get``,
-  ``int()/float()/bool()`` on jitted outputs).
+  ``int()/float()/bool()`` on jitted outputs — including through
+  helpers and imports that forward jitted results or hide syncs).
 * ``TAX002`` — recompile hazard: a raw Python int flowing into a
   static jit parameter without passing through ``pow2_bucket`` /
   ``CachePool.gather_width``.
+* ``TAX003`` — static dispatch-budget proof: the engine's megatick
+  path may not exceed its (dispatches, readbacks)-per-call budget —
+  the compile-time face of the BENCH_ci 1/K gate.
 * ``DIST001`` — collective axis names not bound by the enclosing
   ``shard_map``; ``ppermute`` perms that are statically not a
   bijection.
 * ``DIST002`` — blocking collective inside a ``lax.scan`` /
   ``fori_loop`` / ``while_loop`` body (the literal BSP-tax code smell).
+* ``DIST003`` — a literal ``ppermute`` pipeline whose composed
+  schedule (perm cycles x loop trip count) strands shards — the static
+  analogue of a ring deadlock.
+* ``DIST004`` — collective sequences diverging across ``lax.cond`` /
+  ``lax.switch`` arms inside one mapped region.
 * ``PL001``  — Pallas hygiene: hardcoded ``interpret=True``, inline
   backend probes (use ``jax_compat.default_interpret()``), BlockSpec
   tiles that don't divide the output shape.
 
-CLI: ``python -m repro.analysis [--format text|json] [--output FILE]
-[paths...]`` — exit 0 when clean, 1 on findings, 2 on usage errors.
-Per-line suppressions carry a MANDATORY justification: a ``#`` comment
-reading ``taxlint: ignore[RULE] why this is safe`` (same line, or a
-standalone comment on the line above). An unjustified suppression is
-itself a finding (``SUP001``), as is an unused one (``SUP002``).
-(The scanner is lexical, so this docstring spells the pattern without
-the leading hash.)
+CLI: ``python -m repro.analysis [--format text|json|sarif]
+[--output FILE] [--sarif FILE] [--changed-only] [paths...]`` — exit 0
+when clean, 1 on findings, 2 on usage errors; default paths are the
+existing subset of ``src benchmarks examples tests``. Per-line
+suppressions carry a MANDATORY justification: a real comment token
+reading ``# taxlint: ignore[RULE] why this is safe`` (same line, or a
+standalone comment on the line above). The scanner is token-based, so
+the pattern inside a string literal is inert. An unjustified
+suppression is itself a finding (``SUP001``), as is an unused one
+(``SUP002``).
 
-Rule catalog and suppression policy: ``docs/analysis.md``.
+Rule catalog, architecture, and suppression policy: ``docs/analysis.md``.
 """
 from repro.analysis.core import (Finding, Rule, UsageError, all_rules,
                                  analyze_file, analyze_paths, register)

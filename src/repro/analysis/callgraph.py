@@ -1,0 +1,400 @@
+"""taxprove project model: module graph, call graph, jit boundaries.
+
+This is the whole-program half of the analyzer. ``build_project``
+parses every analyzed file once and resolves three things statically:
+
+* **module graph** — which analyzed file an ``import``/``from``
+  statement lands on.  Files are indexed by every dotted suffix of
+  their path (``repro.models.lm``, ``models.lm``, ``lm``) so resolution
+  works regardless of which scan root (``src``, a tmp fixture dir) the
+  file came in through; an ambiguous suffix resolves to nothing —
+  whole-program conclusions must never rest on a guess.
+* **call graph** — a best-effort, deliberately conservative resolver
+  from a call site to a project-local function: bare names (local defs
+  and ``from m import f``), one module-alias hop (``lm.decode_step``
+  via ``import``/``from .. import lm``), and same-class ``self.m()``
+  method calls.  Everything else (foreign modules, attribute chains
+  like ``self.pool.sync()``, dynamic dispatch) resolves to ``None``
+  and the dataflow rules treat it as opaque.
+* **jit boundaries** — names bound to jitted callables per module
+  (``self._step = jax.jit(...)`` assignments, ``@jax.jit`` /
+  ``partial(jax.jit, ...)`` decorators), resolvable across modules so
+  ``from m import step`` followed by ``step(x)`` is recognized as a
+  compiled-program dispatch at the call site.
+
+Pure stdlib (``ast`` only): importable before any pip install, like
+the rest of the analyzer.  The generic AST helpers at the top are
+shared by ``rules``, ``dataflow``, and ``schedule`` (they lived in
+``rules`` when the analyzer was single-file; ``rules`` re-exports them
+for compatibility).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from collections import deque
+from pathlib import Path
+from typing import Iterable
+
+# ------------------------------------------------------------ ast helpers
+def dotted(node) -> list[str] | None:
+    """['jax', 'jit'] for ``jax.jit``; ['np', 'asarray'] for
+    ``np.asarray``; ['f'] for a bare name; None for anything else."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+def call_parts(call: ast.Call) -> list[str]:
+    return dotted(call.func) or []
+
+
+def keyword(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def const_int(node) -> int | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    return None
+
+
+def const_int_tuple(node) -> tuple[int, ...] | None:
+    """(1, 2, 3) for a tuple/list of int literals, else None."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    vals = []
+    for e in node.elts:
+        v = const_int(e)
+        if v is None:
+            return None
+        vals.append(v)
+    return tuple(vals)
+
+
+def function_defs(tree) -> dict[str, ast.FunctionDef]:
+    """Every def in the file by name (innermost wins on collision —
+    good enough for resolving locally-defined loop/shard_map bodies)."""
+    defs: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+    return defs
+
+
+def resolve_body(arg, defs):
+    """A callable argument as an inspectable node: a lambda, a local
+    def referenced by name, or either wrapped in functools.partial."""
+    if isinstance(arg, ast.Lambda):
+        return arg
+    if isinstance(arg, ast.Name):
+        return defs.get(arg.id)
+    if isinstance(arg, ast.Call) and call_parts(arg)[-1:] == ["partial"] \
+            and arg.args:
+        return resolve_body(arg.args[0], defs)
+    return None
+
+
+def jit_static_spec(call: ast.Call) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """(static positions, static names) declared on a jax.jit call."""
+    nums: tuple[int, ...] = ()
+    names: list[str] = []
+    kw = keyword(call, "static_argnums")
+    if isinstance(kw, ast.Constant) and isinstance(kw.value, int):
+        nums = (kw.value,)
+    else:
+        nums = const_int_tuple(kw) or ()
+    kw = keyword(call, "static_argnames")
+    if isinstance(kw, ast.Constant) and isinstance(kw.value, str):
+        names = [kw.value]
+    elif isinstance(kw, (ast.Tuple, ast.List)):
+        names = [e.value for e in kw.elts
+                 if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return nums, tuple(names)
+
+
+def jit_bound_names(tree) -> set[str]:
+    """Names bound to jitted callables anywhere in the file:
+    ``self.N = jax.jit(...)`` / ``N = jax.jit(...)`` assignments and
+    defs decorated with ``jax.jit`` / ``functools.partial(jax.jit,
+    ...)``. Calls through these names dispatch a compiled program and
+    return device arrays."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and call_parts(node.value)[-1:] == ["jit"]:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out.add(tgt.id)
+                elif isinstance(tgt, ast.Attribute):
+                    out.add(tgt.attr)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                parts = dotted(dec) or []
+                if parts[-1:] == ["jit"]:
+                    out.add(node.name)
+                elif isinstance(dec, ast.Call):
+                    dparts = call_parts(dec)
+                    if dparts[-1:] == ["jit"] or (
+                            dparts[-1:] == ["partial"] and dec.args
+                            and (dotted(dec.args[0]) or [])[-1:] == ["jit"]):
+                        out.add(node.name)
+    return out
+
+
+def assignments_in(fn) -> list[tuple[int, list[str], ast.AST]]:
+    """(line, [target names], rhs) for every assignment in a function,
+    in source order — the cheap flow-sensitivity the taint rules use."""
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            names = []
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    names.append(tgt.id)
+                elif isinstance(tgt, (ast.Tuple, ast.List)):
+                    names.extend(e.id for e in tgt.elts
+                                 if isinstance(e, ast.Name))
+            out.append((node.lineno, names, node.value))
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            tgt = node.target
+            if isinstance(tgt, ast.Name):
+                out.append((node.lineno, [tgt.id], node.value))
+    return sorted(out, key=lambda t: t[0])
+
+
+class Provenance:
+    """Last-assignment-before-line lookup for names in one function."""
+
+    def __init__(self, fn):
+        self._hist: dict[str, list[tuple[int, ast.AST]]] = {}
+        for line, names, rhs in assignments_in(fn):
+            for n in names:
+                self._hist.setdefault(n, []).append((line, rhs))
+
+    def rhs_at(self, name: str, line: int):
+        """RHS of the last assignment to ``name`` strictly before
+        ``line`` (same-line assignments count: x = f(x) sees f's
+        result). None if never assigned locally (param, closure)."""
+        best = None
+        for ln, rhs in self._hist.get(name, ()):
+            if ln <= line:
+                best = rhs
+            else:
+                break
+        return best
+
+
+def walk_scope(root):
+    """``ast.walk`` that stays inside one function scope: does not
+    descend into nested function/class definitions or lambdas (their
+    bodies execute on a different schedule — or never), so per-function
+    summaries don't absorb a nested helper's behavior."""
+    todo = deque([root])
+    while todo:
+        node = todo.popleft()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda, ast.ClassDef)):
+                continue
+            todo.append(child)
+
+
+# ----------------------------------------------------------- module model
+@dataclasses.dataclass
+class FuncInfo:
+    """One project-local function or method (call-graph node)."""
+    module: "ModuleInfo"
+    qualname: str                    # "f" or "Class.f"
+    cls: str | None
+    node: ast.FunctionDef
+
+    @property
+    def key(self) -> tuple[str, str]:
+        return (self.module.path, self.qualname)
+
+
+class ModuleInfo:
+    """One analyzed file: parse tree, imports, functions, jit names."""
+
+    def __init__(self, path: str, display_path: str, source: str,
+                 tree: ast.AST):
+        self.path = path
+        self.display_path = display_path
+        self.source = source
+        self.tree = tree
+        self.lines = source.splitlines()
+        self.parts = _dotted_parts(Path(path))
+        self.jit_names = jit_bound_names(tree)
+        # local name -> dotted module path ("import a.b as x" => x: a.b;
+        # "import a.b" binds the root package a)
+        self.imports_mod: dict[str, str] = {}
+        # local name -> (source module, object name) for "from m import f"
+        self.imports_from: dict[str, tuple[str, str]] = {}
+        self._collect_imports()
+        # qualname -> FuncInfo for top-level defs and class methods
+        self.functions: dict[str, FuncInfo] = {}
+        for node in self.tree.body if isinstance(self.tree, ast.Module) \
+                else []:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions[node.name] = FuncInfo(self, node.name,
+                                                     None, node)
+            elif isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        q = f"{node.name}.{sub.name}"
+                        self.functions[q] = FuncInfo(self, q, node.name,
+                                                     sub)
+
+    def _collect_imports(self):
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self.imports_mod[a.asname] = a.name
+                    else:
+                        root = a.name.split(".")[0]
+                        self.imports_mod[root] = root
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if node.level:
+                    base = self.parts[:len(self.parts) - node.level]
+                    mod = ".".join(base + tuple(
+                        mod.split(".") if mod else ()))
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.imports_from[a.asname or a.name] = (mod, a.name)
+
+
+def _dotted_parts(path: Path) -> tuple[str, ...]:
+    parts = [p for p in path.with_suffix("").parts
+             if p not in (path.anchor, "/", "\\")]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return tuple(parts)
+
+
+_AMBIGUOUS = object()
+
+
+class Project:
+    """All analyzed modules plus cross-module resolution."""
+
+    def __init__(self, modules: list[ModuleInfo]):
+        self.modules = modules
+        self.by_path: dict[str, ModuleInfo] = {m.path: m for m in modules}
+        self._by_suffix: dict[str, object] = {}
+        for m in modules:
+            for k in range(1, len(m.parts) + 1):
+                key = ".".join(m.parts[-k:])
+                if key in self._by_suffix and self._by_suffix[key] is not m:
+                    self._by_suffix[key] = _AMBIGUOUS
+                else:
+                    self._by_suffix[key] = m
+
+    # --------------------------------------------------------- resolution
+    def resolve_module(self, name: str) -> ModuleInfo | None:
+        """Analyzed module for a dotted import path (exact suffix match;
+        ambiguity resolves to None — never guess)."""
+        m = self._by_suffix.get(name)
+        return m if isinstance(m, ModuleInfo) else None
+
+    def _module_for_alias(self, mod: ModuleInfo,
+                          parts: list[str]) -> ModuleInfo | None:
+        """The analyzed module a dotted-name PREFIX refers to inside
+        ``mod``: one alias hop through imports, e.g. ``lm`` after
+        ``from repro.models import lm``, or ``a.b`` after
+        ``import a.b``."""
+        head, rest = parts[0], parts[1:]
+        cands = []
+        if head in mod.imports_from:
+            src, obj = mod.imports_from[head]
+            cands.append(".".join([src, obj] + rest))
+        if head in mod.imports_mod:
+            cands.append(".".join([mod.imports_mod[head]] + rest))
+        for c in cands:
+            m2 = self.resolve_module(c)
+            if m2 is not None:
+                return m2
+        return None
+
+    def resolve_call(self, call: ast.Call, mod: ModuleInfo,
+                     cls: str | None = None) -> FuncInfo | None:
+        """Project-local callee of a call site, or None when the target
+        is foreign/dynamic. Handles bare names (local defs, from-
+        imports), one module-alias hop (``lm.decode_step``), and
+        same-class ``self.m()`` calls."""
+        parts = call_parts(call)
+        if not parts:
+            return None
+        if parts[0] == "self":
+            if cls is not None and len(parts) == 2:
+                return mod.functions.get(f"{cls}.{parts[1]}")
+            return None
+        if len(parts) == 1:
+            name = parts[0]
+            f = mod.functions.get(name)
+            if f is not None:
+                return f
+            if name in mod.imports_from:
+                src, obj = mod.imports_from[name]
+                m2 = self.resolve_module(src)
+                if m2 is not None:
+                    return m2.functions.get(obj)
+            return None
+        m2 = self._module_for_alias(mod, parts[:-1])
+        if m2 is not None:
+            return m2.functions.get(parts[-1])
+        return None
+
+    def call_binds_jitted(self, call: ast.Call, mod: ModuleInfo) -> bool:
+        """Does this call site dispatch through a name LEXICALLY bound
+        to ``jax.jit`` — locally (``self._step = jax.jit(...)``,
+        decorated defs) or through an import of a jit-bound name in
+        another analyzed module? (Helpers that merely *return* a jitted
+        call's result are the dataflow layer's job.)"""
+        parts = call_parts(call)
+        if not parts:
+            return False
+        if parts[-1] in mod.jit_names:
+            return True
+        if len(parts) == 1:
+            if parts[0] in mod.imports_from:
+                src, obj = mod.imports_from[parts[0]]
+                m2 = self.resolve_module(src)
+                return m2 is not None and obj in m2.jit_names
+            return False
+        if parts[0] == "self":
+            return False
+        m2 = self._module_for_alias(mod, parts[:-1])
+        return m2 is not None and parts[-1] in m2.jit_names
+
+
+def build_project(files: Iterable, display=None) -> Project:
+    """Parse every file once and assemble the Project. Unparseable
+    files are skipped here — the per-file driver reports them as PARSE
+    findings; they simply contribute nothing to cross-file resolution.
+    ``display`` maps path -> display path (defaults to as-given)."""
+    modules = []
+    for f in files:
+        p = Path(f)
+        try:
+            source = p.read_text()
+            tree = ast.parse(source, filename=str(p))
+        except (OSError, SyntaxError):
+            continue
+        d = display.get(str(p)) if display else None
+        modules.append(ModuleInfo(str(p), d or p.as_posix(), source, tree))
+    return Project(modules)

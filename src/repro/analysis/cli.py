@@ -11,16 +11,27 @@ Exit-code contract (stable — CI and tests depend on it):
 ``--output FILE`` always writes the full JSON report (findings AND the
 suppression inventory) regardless of ``--format``, so CI can gate on
 the exit code while archiving machine-readable findings as an
-artifact.
+artifact; ``--sarif FILE`` does the same for the SARIF 2.1.0 report
+GitHub code scanning ingests.
+
+Default paths are the repo's analyzed roots — ``src benchmarks
+examples tests`` — filtered to the ones that exist (explicitly-given
+paths must exist or the run is a usage error). ``--changed-only``
+narrows a directory scan to files git reports as modified/untracked,
+falling back to the full scan outside a git checkout — cheap enough
+for a pre-commit hook, never silently weaker than CI's full scan.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 from pathlib import Path
 
 from repro.analysis import core
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples", "tests")
 
 
 def _list_rules() -> str:
@@ -34,22 +45,72 @@ def _list_rules() -> str:
     return "\n".join(lines)
 
 
+def _git_changed_files() -> set[Path] | None:
+    """Absolute paths of files git reports as changed (vs HEAD) or
+    untracked. None when git is unavailable or this is not a checkout —
+    callers then fall back to the full scan."""
+    try:
+        top = subprocess.run(
+            ["git", "rev-parse", "--show-toplevel"],
+            capture_output=True, text=True, timeout=30)
+        if top.returncode != 0:
+            return None
+        root = Path(top.stdout.strip())
+        changed = subprocess.run(
+            ["git", "diff", "--name-only", "HEAD"],
+            capture_output=True, text=True, timeout=30)
+        untracked = subprocess.run(
+            ["git", "ls-files", "--others", "--exclude-standard"],
+            capture_output=True, text=True, timeout=30)
+        if changed.returncode != 0 or untracked.returncode != 0:
+            return None
+        names = changed.stdout.splitlines() + untracked.stdout.splitlines()
+        return {(root / n).resolve() for n in names if n.strip()}
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def _select_changed(paths: list[str]) -> list[Path] | None:
+    """Narrow the scan to changed files under ``paths``. None means
+    'no narrowing possible' (not a git checkout); an empty list means
+    'git says nothing under these paths changed'."""
+    changed = _git_changed_files()
+    if changed is None:
+        return None
+    files = []
+    for f in core.iter_python_files(paths):
+        if Path(f).resolve() in changed:
+            files.append(f)
+    return files
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="taxlint: Three-Taxes static analyzer "
-                    "(host syncs, recompile hazards, collective safety, "
-                    "Pallas hygiene). Stdlib-only; never imports jax.")
+                    "(host syncs, recompile hazards, collective "
+                    "schedules, dispatch budgets, Pallas hygiene). "
+                    "Stdlib-only; never imports jax.")
     parser.add_argument(
-        "paths", nargs="*", default=["src"],
-        help="files or directories to analyze (default: src)")
+        "paths", nargs="*",
+        help="files or directories to analyze (default: the existing "
+             "subset of: " + " ".join(DEFAULT_PATHS) + ")")
     parser.add_argument(
-        "--format", choices=("text", "json"), default="text",
+        "--format", choices=("text", "json", "sarif"), default="text",
         help="stdout report format (default: text)")
     parser.add_argument(
         "--output", metavar="FILE",
         help="also write the JSON report to FILE (written on both "
              "clean and failing runs, for CI artifacts)")
+    parser.add_argument(
+        "--sarif", metavar="FILE",
+        help="also write the SARIF 2.1.0 report to FILE (for GitHub "
+             "code-scanning upload; written on both clean and failing "
+             "runs)")
+    parser.add_argument(
+        "--changed-only", action="store_true",
+        help="analyze only files git reports as changed or untracked "
+             "(full scan outside a git checkout) — for pre-commit")
     parser.add_argument(
         "--list-rules", action="store_true",
         help="print the rule catalog and exit 0")
@@ -59,18 +120,40 @@ def main(argv=None) -> int:
         print(_list_rules())
         return 0
 
+    paths = args.paths
+    if not paths:
+        paths = [p for p in DEFAULT_PATHS if Path(p).is_dir()]
+        if not paths:
+            print("taxlint: error: none of the default paths "
+                  f"({' '.join(DEFAULT_PATHS)}) exist here — pass "
+                  "paths explicitly", file=sys.stderr)
+            return 2
+
     try:
-        findings, suppressed, nfiles = core.analyze_paths(args.paths)
+        if args.changed_only:
+            selected = _select_changed(paths)
+            if selected is None:
+                findings, suppressed, nfiles = core.analyze_paths(paths)
+            else:
+                findings, suppressed, nfiles = core.analyze_paths(selected)
+        else:
+            findings, suppressed, nfiles = core.analyze_paths(paths)
     except core.UsageError as e:
         print(f"taxlint: error: {e}", file=sys.stderr)
         return 2
 
-    report = core.to_report(findings, suppressed, nfiles, args.paths)
+    report = core.to_report(findings, suppressed, nfiles, paths)
     if args.output:
         Path(args.output).write_text(json.dumps(report, indent=2) + "\n")
+    if args.sarif:
+        Path(args.sarif).write_text(
+            json.dumps(core.to_sarif(findings, suppressed), indent=2)
+            + "\n")
 
     if args.format == "json":
         print(json.dumps(report, indent=2))
+    elif args.format == "sarif":
+        print(json.dumps(core.to_sarif(findings, suppressed), indent=2))
     else:
         for f in findings:
             print(f.render())

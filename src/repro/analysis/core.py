@@ -1,14 +1,13 @@
 """taxlint framework: rule registry, suppressions, file/path drivers.
 
-Pure stdlib (``ast`` + ``re``): this module must stay importable
+Pure stdlib (``ast`` + ``tokenize``): this module must stay importable
 without jax so the CI lint job can run it before any pip install.
 
 Suppression contract
 --------------------
-A ``#`` comment reading ``taxlint: ignore[RULE1,RULE2] justification
-text`` (this docstring spells it hash-free because the scanner is
-lexical — the literal pattern anywhere on a line counts, string
-literals included):
+A ``#`` comment reading ``# taxlint: ignore[RULE1,RULE2] justification
+text``. The scanner is token-based: only REAL comment tokens count —
+the pattern inside a string literal (test fixtures, docs) is inert.
 
 * inline (after code on the flagged line) or standalone (a comment-only
   line — it then applies to the next non-comment, non-blank line);
@@ -23,7 +22,9 @@ from __future__ import annotations
 
 import ast
 import dataclasses
+import io
 import re
+import tokenize
 from pathlib import Path
 from typing import Iterable, Iterator
 
@@ -75,16 +76,29 @@ class FileContext:
     """Everything a rule gets to look at for one file."""
 
     def __init__(self, path: str, display_path: str, source: str,
-                 tree: ast.AST):
+                 tree: ast.AST, project=None):
         self.path = path                  # as-resolved (rule scoping)
         self.display_path = display_path  # as-reported
         self.source = source
         self.tree = tree
         self.lines = source.splitlines()
+        self.project = project            # callgraph.Project | None
 
     def matches(self, suffix: str) -> bool:
         """Path scoping for context-sensitive rules (posix suffix)."""
         return Path(self.path).as_posix().endswith(suffix)
+
+    def ensure_project(self):
+        """The whole-program Project this file was analyzed under.
+        ``analyze_paths`` supplies the multi-file one; a standalone
+        ``analyze_file`` (fixture tests, editor integrations) gets a
+        single-file project so the project-aware rules still run with
+        file-local resolution."""
+        if self.project is None:
+            from repro.analysis.callgraph import build_project
+            self.project = build_project(
+                [self.path], display={self.path: self.display_path})
+        return self.project
 
     def finding(self, rule_id: str, node: ast.AST, message: str) -> Finding:
         return Finding(rule_id, self.display_path,
@@ -126,6 +140,19 @@ def all_rules() -> list[Rule]:
 
 
 # ------------------------------------------------------------- suppressions
+def _comment_tokens(lines: list[str]) -> Iterator[tuple[int, int, str]]:
+    """(line, col, text) for every REAL comment token. Tokenizing (not
+    regexing raw lines) is what keeps the suppression pattern inside a
+    string literal inert — test fixtures and docs can spell it freely."""
+    src = "\n".join(lines) + "\n"
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(src).readline):
+            if tok.type == tokenize.COMMENT:
+                yield tok.start[0], tok.start[1], tok.string
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return           # unparseable tail: PARSE already covers the file
+
+
 def collect_suppressions(lines: list[str], display_path: str
                          ) -> tuple[list[Suppression], list[Finding]]:
     """Parse suppression comments. Returns (suppressions, meta findings
@@ -133,8 +160,8 @@ def collect_suppressions(lines: list[str], display_path: str
     sups: list[Suppression] = []
     meta: list[Finding] = []
     n = len(lines)
-    for i, raw in enumerate(lines, start=1):
-        m = SUPPRESS_RE.search(raw)
+    for i, col, text in _comment_tokens(lines):
+        m = SUPPRESS_RE.search(text)
         if not m:
             continue
         rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
@@ -151,7 +178,7 @@ def collect_suppressions(lines: list[str], display_path: str
             meta.append(Finding("SUP001", display_path, i, 0, bad))
             continue
         target = i
-        if raw.strip().startswith("#"):    # standalone: next real line
+        if not lines[i - 1][:col].strip():  # standalone: next real line
             j = i + 1
             while j <= n and (not lines[j - 1].strip()
                               or lines[j - 1].strip().startswith("#")):
@@ -196,9 +223,12 @@ def apply_suppressions(findings: list[Finding], sups: list[Suppression],
 
 # ------------------------------------------------------------------ drivers
 def analyze_file(path, display_path: str | None = None,
-                 rules: Iterable[Rule] | None = None
+                 rules: Iterable[Rule] | None = None, project=None
                  ) -> tuple[list[Finding], list[Finding]]:
-    """Run the rules over one file. Returns (findings, suppressed)."""
+    """Run the rules over one file. Returns (findings, suppressed).
+    ``project`` is the whole-program model when running under
+    ``analyze_paths``; standalone calls get a single-file project built
+    lazily by the rules that need one."""
     p = Path(path)
     display = display_path if display_path is not None else p.as_posix()
     source = p.read_text()
@@ -208,7 +238,7 @@ def analyze_file(path, display_path: str | None = None,
         return [Finding("PARSE", display, e.lineno or 0,
                         (e.offset or 1) - 1,
                         f"file does not parse: {e.msg}")], []
-    ctx = FileContext(str(p), display, source, tree)
+    ctx = FileContext(str(p), display, source, tree, project=project)
     raw: list[Finding] = []
     for rule in (all_rules() if rules is None else rules):
         raw.extend(rule.check(ctx))
@@ -236,18 +266,22 @@ def iter_python_files(paths: Iterable) -> Iterator[Path]:
 def analyze_paths(paths: Iterable, rules: Iterable[Rule] | None = None
                   ) -> tuple[list[Finding], list[Finding], int]:
     """Analyze every ``*.py`` under the given paths. Returns
-    (findings, suppressed, files_analyzed)."""
+    (findings, suppressed, files_analyzed). Builds the whole-program
+    Project over the full file set first so cross-file resolution
+    (interprocedural taint, imported jit bindings, dispatch budgets)
+    sees every analyzed module."""
+    from repro.analysis.callgraph import build_project
     if rules is None:
         rules = all_rules()
+    files = list(iter_python_files(paths))
+    project = build_project(files)
     findings: list[Finding] = []
     suppressed: list[Finding] = []
-    nfiles = 0
-    for f in iter_python_files(paths):
-        nfiles += 1
-        un, sup = analyze_file(f, rules=rules)
+    for f in files:
+        un, sup = analyze_file(f, rules=rules, project=project)
         findings.extend(un)
         suppressed.extend(sup)
-    return findings, suppressed, nfiles
+    return findings, suppressed, len(files)
 
 
 def to_report(findings: list[Finding], suppressed: list[Finding],
@@ -265,4 +299,60 @@ def to_report(findings: list[Finding], suppressed: list[Finding],
         "summary": {"findings": len(findings),
                     "suppressed": len(suppressed),
                     "by_rule": dict(sorted(by_rule.items()))},
+    }
+
+
+_SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/"
+                 "sarif-spec/master/Schemata/sarif-schema-2.1.0.json")
+
+
+def to_sarif(findings: list[Finding], suppressed: list[Finding],
+             rules: Iterable[Rule] | None = None) -> dict:
+    """SARIF 2.1.0 report (GitHub code-scanning): unsuppressed findings
+    as plain results, justified suppressions as results carrying an
+    ``inSource`` suppression object so dashboards inventory them
+    without failing the scan."""
+    catalog: dict[str, dict] = {}
+    for r in (all_rules() if rules is None else rules):
+        catalog[r.id] = {
+            "id": r.id,
+            "name": type(r).__name__,
+            "shortDescription": {"text": r.title},
+            "fullDescription": {"text": f"guards: {r.tax}"},
+            "help": {"text": "Rule catalog and fix guidance: "
+                             "docs/analysis.md"},
+        }
+    for rid, desc in META_RULES.items():
+        catalog[rid] = {"id": rid, "name": rid,
+                        "shortDescription": {"text": desc}}
+
+    def result(f: Finding, *, is_suppressed: bool) -> dict:
+        r = {
+            "ruleId": f.rule,
+            "level": "error",
+            "message": {"text": f.message},
+            "locations": [{"physicalLocation": {
+                "artifactLocation": {"uri": f.path},
+                "region": {"startLine": max(f.line, 1),
+                           "startColumn": f.col + 1},
+            }}],
+        }
+        if is_suppressed:
+            r["suppressions"] = [{"kind": "inSource",
+                                  "justification": f.justification}]
+        return r
+
+    return {
+        "$schema": _SARIF_SCHEMA,
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "taxlint",
+                "version": "1.0.0",
+                "rules": [catalog[k] for k in sorted(catalog)],
+            }},
+            "results": ([result(f, is_suppressed=False) for f in findings]
+                        + [result(f, is_suppressed=True)
+                           for f in suppressed]),
+        }],
     }

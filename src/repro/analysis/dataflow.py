@@ -1,0 +1,355 @@
+"""taxprove dataflow: interprocedural summaries and dispatch budgets.
+
+Built on the :mod:`callgraph` project model, this module computes the
+whole-program facts the rules consume:
+
+* **function summaries** (fixed point over the call graph):
+  ``returns_jitted`` — does a function return the un-synced result of a
+  jitted dispatch (directly, through a local name, a tuple, or a call
+  to another summarized function)? — and ``has_sync`` — does a function
+  body reach a host sync (``np.asarray`` / ``jax.device_get`` /
+  ``.item()`` / ``.block_until_ready()``) that is NOT covered by a
+  justified TAX001 suppression, directly or through any resolvable
+  callee?  TAX001 uses these to taint across helper calls and module
+  boundaries instead of stopping at the file edge.
+* **dispatch budgets** (TAX003): a branch-aware cost walk that counts,
+  per call of a function, an upper bound on jitted-program dispatches
+  and host readbacks — ``if``/``else`` takes the elementwise max over
+  arms, a Python loop whose body spends anything makes the count
+  unbounded, and resolvable project callees contribute their own
+  (memoized) counts.  Suppressed syncs still COUNT here: a justified
+  readback is exempt from TAX001's style gate but it still spends real
+  budget, which is exactly what the 1/K megatick contract bounds.
+
+Everything here is an UPPER bound under static resolution: calls the
+call graph cannot resolve contribute nothing (the runtime bench gate
+stays the backstop for those), and anything statically unbounded is
+reported as such rather than guessed at.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import math
+
+from repro.analysis.callgraph import (
+    FuncInfo, Project, Provenance, call_parts, walk_scope,
+)
+from repro.analysis.core import collect_suppressions
+
+SYNC_NP_MODULES = {"np", "numpy", "onp"}
+
+
+def sync_kind(call: ast.Call) -> str | None:
+    """The host-sync flavor of a call site, or None. Mirrors TAX001's
+    direct-sync patterns so the interprocedural and intraprocedural
+    halves of the rule can never disagree on what a sync is."""
+    parts = call_parts(call)
+    if not parts:
+        return None
+    if parts[-1] == "asarray" and len(parts) >= 2 \
+            and parts[-2] in SYNC_NP_MODULES:
+        return "np.asarray"
+    if parts == ["jax", "device_get"]:
+        return "jax.device_get"
+    if parts[-1] == "block_until_ready" \
+            and isinstance(call.func, ast.Attribute):
+        return ".block_until_ready()"
+    if parts[-1] == "item" and not call.args and not call.keywords \
+            and isinstance(call.func, ast.Attribute):
+        return ".item()"
+    return None
+
+
+# ------------------------------------------------------------------ costs
+@dataclasses.dataclass(frozen=True)
+class Cost:
+    """(dispatches, readbacks) upper bound per call; ``inf`` when a
+    Python loop multiplies a spend by an unknown trip count —
+    ``loop_line`` then points at the first such loop."""
+    dispatches: float = 0.0
+    readbacks: float = 0.0
+    loop_line: int | None = None
+
+    def add(self, other: "Cost") -> "Cost":
+        return Cost(self.dispatches + other.dispatches,
+                    self.readbacks + other.readbacks,
+                    self.loop_line or other.loop_line)
+
+    def maximum(self, other: "Cost") -> "Cost":
+        return Cost(max(self.dispatches, other.dispatches),
+                    max(self.readbacks, other.readbacks),
+                    self.loop_line or other.loop_line)
+
+    @property
+    def spends(self) -> bool:
+        return self.dispatches > 0 or self.readbacks > 0
+
+    @property
+    def unbounded(self) -> bool:
+        return math.isinf(self.dispatches) or math.isinf(self.readbacks)
+
+
+ZERO = Cost()
+
+
+def _unbounded(line: int) -> Cost:
+    return Cost(math.inf, math.inf, line)
+
+
+# -------------------------------------------------------------- summaries
+@dataclasses.dataclass(frozen=True)
+class SyncWitness:
+    path: str          # display path of the file holding the sync
+    line: int
+    kind: str
+
+    def render(self) -> str:
+        return f"{self.kind} at {self.path}:{self.line}"
+
+
+class Summaries:
+    """Whole-program function summaries, computed once per Project."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.returns_jitted: dict[tuple, bool] = {}
+        self.has_sync: dict[tuple, SyncWitness | None] = {}
+        self._sync_suppressed: dict[str, set[int]] = {}
+        self._cost_cache: dict[tuple, Cost] = {}
+        self._cost_stack: set[tuple] = set()
+        self._prov_cache: dict[tuple, Provenance] = {}
+        self._compute()
+
+    # ----------------------------------------------------------- helpers
+    def _prov(self, f: FuncInfo) -> Provenance:
+        p = self._prov_cache.get(f.key)
+        if p is None:
+            p = self._prov_cache[f.key] = Provenance(f.node)
+        return p
+
+    def _tax001_suppressed(self, mod) -> set[int]:
+        """Lines in a module covered by a justified TAX001 suppression:
+        syncs there are the sanctioned once-per-dispatch readbacks and
+        must not propagate taint to their callers."""
+        lines = self._sync_suppressed.get(mod.path)
+        if lines is None:
+            sups, _ = collect_suppressions(mod.lines, mod.display_path)
+            lines = {s.target_line for s in sups if "TAX001" in s.rules}
+            self._sync_suppressed[mod.path] = lines
+        return lines
+
+    def call_is_jitted(self, call: ast.Call, mod,
+                       cls: str | None = None) -> bool:
+        """Does this call site dispatch a compiled program — a lexical
+        jit binding (local or imported) or a project function whose
+        summary says it returns a jitted result?"""
+        if self.project.call_binds_jitted(call, mod):
+            return True
+        f = self.project.resolve_call(call, mod, cls)
+        return f is not None and self.returns_jitted.get(f.key, False)
+
+    def resolve(self, call: ast.Call, f: FuncInfo) -> FuncInfo | None:
+        return self.project.resolve_call(call, f.module, f.cls)
+
+    # -------------------------------------------------------- fixed point
+    def _compute(self):
+        funcs = [f for m in self.project.modules
+                 for f in m.functions.values()]
+        for f in funcs:
+            self.returns_jitted[f.key] = False
+            self.has_sync[f.key] = self._direct_sync(f)
+        changed = True
+        while changed:
+            changed = False
+            for f in funcs:
+                if not self.returns_jitted[f.key] \
+                        and self._fn_returns_jitted(f):
+                    self.returns_jitted[f.key] = True
+                    changed = True
+                if self.has_sync[f.key] is None:
+                    w = self._callee_sync(f)
+                    if w is not None:
+                        self.has_sync[f.key] = w
+                        changed = True
+
+    def _direct_sync(self, f: FuncInfo) -> SyncWitness | None:
+        suppressed = self._tax001_suppressed(f.module)
+        for node in walk_scope(f.node):
+            if isinstance(node, ast.Call):
+                kind = sync_kind(node)
+                if kind is not None and node.lineno not in suppressed:
+                    return SyncWitness(f.module.display_path,
+                                       node.lineno, kind)
+        return None
+
+    def _callee_sync(self, f: FuncInfo) -> SyncWitness | None:
+        for node in walk_scope(f.node):
+            if isinstance(node, ast.Call):
+                callee = self.resolve(node, f)
+                if callee is not None:
+                    w = self.has_sync.get(callee.key)
+                    if w is not None:
+                        return w
+        return None
+
+    def _fn_returns_jitted(self, f: FuncInfo) -> bool:
+        prov = self._prov(f)
+        for node in walk_scope(f.node):
+            if isinstance(node, ast.Return) and node.value is not None \
+                    and self.expr_is_jitted(node.value, f, prov,
+                                            node.lineno):
+                return True
+        return False
+
+    def expr_is_jitted(self, expr, f: FuncInfo, prov: Provenance,
+                       line: int, depth: int = 0) -> bool:
+        """Is this expression the un-synced result of a jitted
+        dispatch? A sync call wrapping it (``np.asarray(step(x))``)
+        already paid the readback and clears the taint."""
+        if isinstance(expr, ast.Call):
+            if sync_kind(expr) is not None:
+                return False
+            return self.call_is_jitted(expr, f.module, f.cls)
+        if isinstance(expr, ast.Tuple):
+            return any(self.expr_is_jitted(e, f, prov, line, depth)
+                       for e in expr.elts)
+        if isinstance(expr, ast.Name) and depth < 4:
+            rhs = prov.rhs_at(expr.id, line)
+            if rhs is not None:
+                return self.expr_is_jitted(rhs, f, prov, line, depth + 1)
+        return False
+
+    # ------------------------------------------------------ cost counting
+    def costs(self, f: FuncInfo) -> Cost:
+        """Upper-bound (dispatches, readbacks) per call of ``f``."""
+        c = self._cost_cache.get(f.key)
+        if c is not None:
+            return c
+        if f.key in self._cost_stack:
+            return ZERO        # recursion: charge the cycle once at entry
+        self._cost_stack.add(f.key)
+        try:
+            c, _ = self._seq(f.node.body, f)
+        finally:
+            self._cost_stack.discard(f.key)
+        self._cost_cache[f.key] = c
+        return c
+
+    def _seq(self, stmts, f: FuncInfo) -> tuple[Cost, bool]:
+        """Cost of a statement sequence and whether every path through
+        it terminates (returns/raises) before falling off the end."""
+        if not stmts:
+            return ZERO, False
+        head, rest = stmts[0], stmts[1:]
+        if isinstance(head, ast.Return):
+            c = self._expr(head.value, f) if head.value is not None else ZERO
+            return c, True
+        if isinstance(head, ast.Raise):
+            c = self._expr(head.exc, f) if head.exc is not None else ZERO
+            return c, True
+        if isinstance(head, (ast.Break, ast.Continue)):
+            return ZERO, True
+        if isinstance(head, ast.If):
+            rc, rt = self._seq(rest, f)
+            tc, tt = self._seq(head.body, f)
+            fc, ft = self._seq(head.orelse, f)
+            test = self._expr(head.test, f)
+            t_total = tc if tt else tc.add(rc)
+            f_total = fc if ft else fc.add(rc)
+            return test.add(t_total.maximum(f_total)), rt or (tt and ft)
+        if isinstance(head, (ast.For, ast.AsyncFor, ast.While)):
+            setup = self._expr(head.iter if hasattr(head, "iter")
+                               else head.test, f)
+            body_c, _ = self._seq(head.body, f)
+            else_c, _ = self._seq(head.orelse, f)
+            loop = _unbounded(head.lineno) if body_c.spends else ZERO
+            rc, rt = self._seq(rest, f)
+            return setup.add(loop).add(else_c).add(rc), rt
+        if isinstance(head, (ast.With, ast.AsyncWith)):
+            items = ZERO
+            for item in head.items:
+                items = items.add(self._expr(item.context_expr, f))
+            bc, bt = self._seq(head.body, f)
+            if bt:
+                return items.add(bc), True
+            rc, rt = self._seq(rest, f)
+            return items.add(bc).add(rc), rt
+        if isinstance(head, ast.Try):
+            total = ZERO
+            for block in ([head.body, head.orelse, head.finalbody]
+                          + [h.body for h in head.handlers]):
+                bc, _ = self._seq(block, f)
+                total = total.add(bc)
+            rc, rt = self._seq(rest, f)
+            return total.add(rc), rt
+        if isinstance(head, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            rc, rt = self._seq(rest, f)
+            return rc, rt
+        # simple statements (Expr/Assign/AugAssign/Assert/...) have no
+        # statement children: walk their expressions directly
+        rc, rt = self._seq(rest, f)
+        return self._expr(head, f).add(rc), rt
+
+    def _expr(self, node, f: FuncInfo) -> Cost:
+        """Cost of evaluating one expression tree. Lambda bodies cost
+        nothing here (they run when called); a comprehension whose body
+        spends is unbounded (unknown multiplicity)."""
+        if node is None:
+            return ZERO
+        total = ZERO
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.Lambda, ast.FunctionDef,
+                              ast.AsyncFunctionDef)):
+                continue
+            if isinstance(n, (ast.ListComp, ast.SetComp, ast.DictComp,
+                              ast.GeneratorExp)):
+                inner = ZERO
+                for child in ast.iter_child_nodes(n):
+                    inner = inner.add(self._expr(child, f))
+                if inner.spends:
+                    total = total.add(_unbounded(n.lineno))
+                continue
+            if isinstance(n, ast.Call):
+                total = total.add(self._call_cost(n, f))
+            stack.extend(ast.iter_child_nodes(n))
+        return total
+
+    def _call_cost(self, call: ast.Call, f: FuncInfo) -> Cost:
+        """Cost of THIS call site alone (arguments are walked by the
+        caller — an inner jitted call inside np.asarray(...) charges
+        its own dispatch when the walker reaches it)."""
+        if sync_kind(call) is not None:
+            return Cost(0, 1)
+        if isinstance(call.func, ast.Name) \
+                and call.func.id in ("int", "float", "bool") \
+                and len(call.args) == 1:
+            arg = call.args[0]
+            prov = self._prov(f)
+            hit = self.expr_is_jitted(arg, f, prov, call.lineno)
+            if not hit:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Name) and self.expr_is_jitted(
+                            sub, f, prov, call.lineno):
+                        hit = True
+                        break
+            return Cost(0, 1) if hit else ZERO
+        if self.call_is_jitted(call, f.module, f.cls):
+            return Cost(1, 0)
+        callee = self.resolve(call, f)
+        if callee is not None:
+            return self.costs(callee)
+        return ZERO
+
+
+def get_summaries(project: Project) -> Summaries:
+    """Memoized summaries for a Project (computed on first use, shared
+    by every rule analyzing files under that project)."""
+    s = getattr(project, "_taxprove_summaries", None)
+    if s is None:
+        s = Summaries(project)
+        project._taxprove_summaries = s
+    return s

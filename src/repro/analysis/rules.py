@@ -1,171 +1,40 @@
 """taxlint rules: the three taxes, encoded as stdlib-ast checks.
 
 Every rule is deliberately CONSERVATIVE: it fires only on patterns it
-can prove locally (one file, lexical scope, literal values), because a
+can prove (literal values, statically-resolvable calls), because a
 blocking lint gate that cries wolf gets suppressed wholesale. What a
 rule cannot prove it lets pass — the runtime oracles (token-identity
 batteries, structural bench gates) stay the backstop for the rest.
 
-Shared helpers live at the top; each rule documents the exact pattern
-it flags, the tax it guards, and the sanctioned alternative.
+The whole-program machinery lives in sibling modules — the module/call
+graph in :mod:`callgraph`, interprocedural sync/jit summaries and the
+dispatch-cost model in :mod:`dataflow`, collective-schedule simulation
+in :mod:`schedule` — and this module holds the Rule classes that bind
+those analyses to findings. Each rule documents the exact pattern it
+flags, the tax it guards, and the sanctioned alternative.
 """
 from __future__ import annotations
 
 import ast
 from typing import Iterator
 
-from repro.analysis.core import FileContext, Rule, register
+from repro.analysis.core import FileContext, Finding, Rule, register
+# AST helpers live in callgraph since the whole-program split; they are
+# re-exported here because tests and earlier docs import them from rules.
+from repro.analysis.callgraph import (  # noqa: F401  (re-exports)
+    Provenance as _Provenance,
+    assignments_in, call_parts, const_int_tuple, dotted, function_defs,
+    jit_bound_names, jit_static_spec, keyword, resolve_body,
+)
+from repro.analysis.dataflow import SYNC_NP_MODULES, get_summaries
+from repro.analysis.schedule import (
+    BLOCKING_COLLECTIVES as _BLOCKING_COLLECTIVES,
+    LOOP_BODY_ARG as _LOOP_BODY_ARG,
+    check_branch_divergence, check_ring_schedule, is_lax_call,
+    lax_imported_names, literal_perm, shard_map_regions,
+)
 
-# ------------------------------------------------------------ ast helpers
-def dotted(node) -> list[str] | None:
-    """['jax', 'jit'] for ``jax.jit``; ['np', 'asarray'] for
-    ``np.asarray``; ['f'] for a bare name; None for anything else."""
-    parts: list[str] = []
-    while isinstance(node, ast.Attribute):
-        parts.append(node.attr)
-        node = node.value
-    if isinstance(node, ast.Name):
-        parts.append(node.id)
-        return parts[::-1]
-    return None
-
-
-def call_parts(call: ast.Call) -> list[str]:
-    return dotted(call.func) or []
-
-
-def keyword(call: ast.Call, name: str):
-    for kw in call.keywords:
-        if kw.arg == name:
-            return kw.value
-    return None
-
-
-def const_int_tuple(node) -> tuple[int, ...] | None:
-    """(1, 2, 3) for a tuple/list of int literals, else None."""
-    if not isinstance(node, (ast.Tuple, ast.List)):
-        return None
-    vals = []
-    for e in node.elts:
-        if isinstance(e, ast.Constant) and isinstance(e.value, int) \
-                and not isinstance(e.value, bool):
-            vals.append(e.value)
-        else:
-            return None
-    return tuple(vals)
-
-
-def function_defs(tree) -> dict[str, ast.FunctionDef]:
-    """Every def in the file by name (innermost wins on collision —
-    good enough for resolving locally-defined loop/shard_map bodies)."""
-    defs: dict[str, ast.FunctionDef] = {}
-    for node in ast.walk(tree):
-        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            defs[node.name] = node
-    return defs
-
-
-def resolve_body(arg, defs):
-    """A callable argument as an inspectable node: a lambda, a local
-    def referenced by name, or either wrapped in functools.partial."""
-    if isinstance(arg, ast.Lambda):
-        return arg
-    if isinstance(arg, ast.Name):
-        return defs.get(arg.id)
-    if isinstance(arg, ast.Call) and call_parts(arg)[-1:] == ["partial"] \
-            and arg.args:
-        return resolve_body(arg.args[0], defs)
-    return None
-
-
-def jit_static_spec(call: ast.Call) -> tuple[tuple[int, ...], tuple[str, ...]]:
-    """(static positions, static names) declared on a jax.jit call."""
-    nums: tuple[int, ...] = ()
-    names: list[str] = []
-    kw = keyword(call, "static_argnums")
-    if isinstance(kw, ast.Constant) and isinstance(kw.value, int):
-        nums = (kw.value,)
-    else:
-        nums = const_int_tuple(kw) or ()
-    kw = keyword(call, "static_argnames")
-    if isinstance(kw, ast.Constant) and isinstance(kw.value, str):
-        names = [kw.value]
-    elif isinstance(kw, (ast.Tuple, ast.List)):
-        names = [e.value for e in kw.elts
-                 if isinstance(e, ast.Constant) and isinstance(e.value, str)]
-    return nums, tuple(names)
-
-
-def jit_bound_names(tree) -> set[str]:
-    """Names bound to jitted callables anywhere in the file:
-    ``self.N = jax.jit(...)`` / ``N = jax.jit(...)`` assignments and
-    defs decorated with ``jax.jit`` / ``functools.partial(jax.jit,
-    ...)``. Calls through these names dispatch a compiled program and
-    return device arrays."""
-    out: set[str] = set()
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
-                and call_parts(node.value)[-1:] == ["jit"]:
-            for tgt in node.targets:
-                if isinstance(tgt, ast.Name):
-                    out.add(tgt.id)
-                elif isinstance(tgt, ast.Attribute):
-                    out.add(tgt.attr)
-        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            for dec in node.decorator_list:
-                parts = dotted(dec) or []
-                if parts[-1:] == ["jit"]:
-                    out.add(node.name)
-                elif isinstance(dec, ast.Call):
-                    dparts = call_parts(dec)
-                    if dparts[-1:] == ["jit"] or (
-                            dparts[-1:] == ["partial"] and dec.args
-                            and (dotted(dec.args[0]) or [])[-1:] == ["jit"]):
-                        out.add(node.name)
-    return out
-
-
-def assignments_in(fn) -> list[tuple[int, list[str], ast.AST]]:
-    """(line, [target names], rhs) for every assignment in a function,
-    in source order — the cheap flow-sensitivity the taint rules use."""
-    out = []
-    for node in ast.walk(fn):
-        if isinstance(node, ast.Assign):
-            names = []
-            for tgt in node.targets:
-                if isinstance(tgt, ast.Name):
-                    names.append(tgt.id)
-                elif isinstance(tgt, (ast.Tuple, ast.List)):
-                    names.extend(e.id for e in tgt.elts
-                                 if isinstance(e, ast.Name))
-            out.append((node.lineno, names, node.value))
-        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
-            tgt = node.target
-            if isinstance(tgt, ast.Name):
-                out.append((node.lineno, [tgt.id], node.value))
-    return sorted(out, key=lambda t: t[0])
-
-
-class _Provenance:
-    """Last-assignment-before-line lookup for names in one function."""
-
-    def __init__(self, fn):
-        self._hist: dict[str, list[tuple[int, ast.AST]]] = {}
-        for line, names, rhs in assignments_in(fn):
-            for n in names:
-                self._hist.setdefault(n, []).append((line, rhs))
-
-    def rhs_at(self, name: str, line: int):
-        """RHS of the last assignment to ``name`` strictly before
-        ``line`` (same-line assignments count: x = f(x) sees f's
-        result). None if never assigned locally (param, closure)."""
-        best = None
-        for ln, rhs in self._hist.get(name, ()):
-            if ln <= line:
-                best = rhs
-            else:
-                break
-        return best
+_SYNC_NP_MODULES = SYNC_NP_MODULES        # back-compat alias
 
 
 # ---------------------------------------------------------------- TAX001
@@ -178,8 +47,6 @@ HOT_FUNCTIONS = {
     "models/lm.py": frozenset(
         {"decode_step", "decode_chunk", "decode_multi"}),
 }
-
-_SYNC_NP_MODULES = {"np", "numpy", "onp"}
 
 
 @register
@@ -198,11 +65,22 @@ class HostSyncInHotPath(Rule):
     * ``int()/float()/bool()`` applied to the result of a jitted call
       (direct, or through a name assigned from one — reassigning the
       name from anything else, e.g. ``out = np.asarray(out)``, clears
-      the taint: the sync already happened and was flagged there).
+      the taint: the sync already happened and was flagged there);
+    * a call to ANY project function — same file or another analyzed
+      module — whose body transitively reaches an unjustified host
+      sync (interprocedural taint via the :mod:`dataflow` summaries):
+      hiding the ``np.asarray`` in a helper does not hide the launch
+      gap.
+
+    "Jitted call" is resolved whole-program too: local ``jax.jit``
+    bindings, jit-bound names imported from other analyzed modules, and
+    helpers that merely forward a jitted call's result all taint.
 
     A legitimate once-per-dispatch sync (the (B, K) sampled-token
     readback that drives Python-side scheduling) is suppressed with a
     written justification; per-token syncs get eliminated instead.
+    Suppressed syncs do not propagate taint to their callers — the
+    justification covers the whole dispatch path through them.
     """
 
     id = "TAX001"
@@ -217,25 +95,26 @@ class HostSyncInHotPath(Rule):
                 break
         if hot is None:
             return
-        jitted = jit_bound_names(ctx.tree)
-        for node in ast.walk(ctx.tree):
-            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
-                    and node.name in hot:
-                yield from self._check_fn(ctx, node, jitted)
+        project = ctx.ensure_project()
+        mod = project.by_path.get(ctx.path)
+        if mod is None:
+            return
+        summaries = get_summaries(project)
+        for finfo in mod.functions.values():
+            if finfo.node.name in hot:
+                yield from self._check_fn(ctx, finfo, summaries)
 
-    def _is_jitted_call(self, node, jitted) -> bool:
-        if not isinstance(node, ast.Call):
-            return False
-        parts = call_parts(node)
-        return bool(parts) and parts[-1] in jitted
-
-    def _check_fn(self, ctx, fn, jitted):
-        # taint: names holding un-synced jitted-call results
+    def _check_fn(self, ctx, finfo, summaries):
+        fn, mod, cls = finfo.node, finfo.module, finfo.cls
         prov = _Provenance(fn)
+
+        def is_jitted(node) -> bool:
+            return isinstance(node, ast.Call) \
+                and summaries.call_is_jitted(node, mod, cls)
 
         def tainted(name: str, line: int) -> bool:
             rhs = prov.rhs_at(name, line)
-            return rhs is not None and self._is_jitted_call(rhs, jitted)
+            return rhs is not None and is_jitted(rhs)
 
         for node in ast.walk(fn):
             if not isinstance(node, ast.Call):
@@ -270,7 +149,7 @@ class HostSyncInHotPath(Rule):
                     and node.func.id in ("int", "float", "bool") \
                     and len(node.args) == 1:
                 arg = node.args[0]
-                hit = self._is_jitted_call(arg, jitted)
+                hit = is_jitted(arg)
                 if not hit:
                     for sub in ast.walk(arg):
                         if isinstance(sub, ast.Name) \
@@ -283,6 +162,21 @@ class HostSyncInHotPath(Rule):
                         f"{node.func.id}() on a jitted output in the "
                         f"tick hot path forces a scalar device->host "
                         f"sync — a launch gap per call")
+            else:
+                callee = summaries.resolve(node, finfo)
+                if callee is not None and callee.node is not fn:
+                    witness = summaries.has_sync.get(callee.key)
+                    if witness is not None:
+                        yield ctx.finding(
+                            self.id, node,
+                            f"call to {callee.qualname} "
+                            f"({callee.module.display_path}) reaches a "
+                            f"host sync ({witness.render()}) from the "
+                            f"tick hot path — a launch gap per call; "
+                            f"keep the helper device-resident or "
+                            f"suppress THIS call site with the "
+                            f"justification (helper-side suppressions "
+                            f"only apply inside hot files)")
 
 
 # ---------------------------------------------------------------- TAX002
@@ -395,6 +289,90 @@ class UnbucketedStaticJitArg(Rule):
                 f"CachePool.gather_width) to bound specializations")
 
 
+# ---------------------------------------------------------------- TAX003
+# static dispatch budgets for the decode hot path, per (path suffix,
+# function name): (max jitted dispatches, max host readbacks) reachable
+# per CALL — the compile-time face of the BENCH_ci 1/K gate.
+#
+# serving/engine.py contract (PR 5, decode_steps=K megaticks):
+#   _megatick — ONE fused _stepK dispatch + ONE (B, K) sampled-token
+#     readback per K decode steps = the 1/K bound itself;
+#   _tick — the single-step path: one _step1/_stepC dispatch (branch
+#     max) plus _next_tokens' one sampler dispatch + one readback.
+DISPATCH_BUDGETS = {
+    "serving/engine.py": {
+        "_megatick": (1, 1),
+        "_tick": (2, 1),
+    },
+}
+
+
+@register
+class DispatchBudget(Rule):
+    """TAX003 — static dispatch-budget proof for the decode path.
+
+    Walks the budgeted functions with the :mod:`dataflow` cost model:
+    every reachable jitted-callable invocation (resolved whole-program
+    — local jit bindings, imported jit names, helpers returning jitted
+    results) counts one dispatch, every host readback (``np.asarray``,
+    ``.item()``, ``device_get``, ``int()`` on jitted output —
+    INCLUDING justified-suppressed ones, which spend real budget even
+    when TAX001 waves them through) counts one readback. ``if``/
+    ``else`` takes the elementwise max over arms; a Python loop whose
+    body spends anything is statically unbounded and fails outright;
+    resolvable callees contribute their own counts.
+
+    Exceeding the budget means the ``decode_steps=K`` 1/K dispatch
+    bound — the BENCH_ci gate — cannot hold: fix the path (fuse the
+    work into the jitted program, hoist the spend out of the loop) or,
+    for a deliberate contract change, update ``DISPATCH_BUDGETS``
+    alongside the bench gate in the same PR.
+    """
+
+    id = "TAX003"
+    tax = "kernel-launch overhead (the 1/K megatick dispatch bound)"
+    title = "decode path exceeds its static dispatch/readback budget"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        budgets = None
+        for suffix, b in DISPATCH_BUDGETS.items():
+            if ctx.matches(suffix):
+                budgets = b
+                break
+        if budgets is None:
+            return
+        project = ctx.ensure_project()
+        mod = project.by_path.get(ctx.path)
+        if mod is None:
+            return
+        summaries = get_summaries(project)
+        for name, (max_d, max_r) in sorted(budgets.items()):
+            for finfo in mod.functions.values():
+                if finfo.node.name != name:
+                    continue
+                cost = summaries.costs(finfo)
+                if cost.unbounded:
+                    yield ctx.finding(
+                        self.id, finfo.node,
+                        f"{finfo.qualname} spends dispatch/readback "
+                        f"budget inside a Python loop at line "
+                        f"{cost.loop_line} — per-call cost is "
+                        f"statically unbounded, so the decode_steps=K "
+                        f"1/K dispatch bound cannot hold; hoist the "
+                        f"spend out of the loop or fuse it into the "
+                        f"jitted program")
+                elif cost.dispatches > max_d or cost.readbacks > max_r:
+                    yield ctx.finding(
+                        self.id, finfo.node,
+                        f"{finfo.qualname} statically reaches "
+                        f"{int(cost.dispatches)} jitted dispatch(es) "
+                        f"and {int(cost.readbacks)} host readback(s) "
+                        f"per call — budget is ({max_d}, {max_r}) from "
+                        f"the decode_steps=K megatick contract; fuse "
+                        f"the extra work into the jitted program or "
+                        f"update DISPATCH_BUDGETS with the bench gate")
+
+
 # ---------------------------------------------------------------- DIST001
 _COLLECTIVE_AXIS_ARG = {
     "psum": 1, "pmean": 1, "pmax": 1, "pmin": 1, "all_gather": 1,
@@ -481,15 +459,9 @@ class CollectiveAxisSafety(Rule):
                 else keyword(call, "perm"))
         if not isinstance(perm, (ast.List, ast.Tuple)):
             return
-        pairs = []
-        for e in perm.elts:
-            if isinstance(e, (ast.Tuple, ast.List)):
-                pair = const_int_tuple(e)
-                if pair is None or len(pair) != 2:
-                    return               # dynamic pair: unknowable
-                pairs.append(pair)
-            else:
-                return
+        pairs = literal_perm(call)
+        if pairs is None:
+            return
         srcs = [p[0] for p in pairs]
         dsts = [p[1] for p in pairs]
         if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
@@ -501,11 +473,6 @@ class CollectiveAxisSafety(Rule):
 
 
 # ---------------------------------------------------------------- DIST002
-_BLOCKING_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather",
-                         "all_to_all", "psum_scatter"}
-_LOOP_BODY_ARG = {"scan": 0, "fori_loop": 2, "while_loop": 1}
-
-
 @register
 class BlockingCollectiveInLoop(Rule):
     """DIST002 — blocking collective inside a scan/loop body.
@@ -520,7 +487,8 @@ class BlockingCollectiveInLoop(Rule):
     iteration (e.g. a debug oracle) gets a justified suppression.
 
     ``ppermute`` itself is exempt: a permute in a loop body is the
-    pipelined pattern, not the tax.
+    pipelined pattern, not the tax. Whether the pipeline's schedule
+    adds up is DIST003's job.
     """
 
     id = "DIST002"
@@ -529,20 +497,12 @@ class BlockingCollectiveInLoop(Rule):
 
     def check(self, ctx: FileContext) -> Iterator[Finding]:
         defs = function_defs(ctx.tree)
-        lax_names = self._lax_imports(ctx.tree)
+        lax_names = lax_imported_names(ctx.tree)
         for node in ast.walk(ctx.tree):
             if not isinstance(node, ast.Call):
                 continue
-            parts = call_parts(node)
-            name = parts[-1] if parts else None
-            if name not in _LOOP_BODY_ARG:
-                continue
-            # attribute form must go through a lax module; a bare name
-            # must have been imported from jax.lax — keeps foreign
-            # .scan() methods out
-            if len(parts) > 1 and "lax" not in parts[:-1]:
-                continue
-            if len(parts) == 1 and name not in lax_names:
+            name = is_lax_call(node, frozenset(_LOOP_BODY_ARG), lax_names)
+            if name is None:
                 continue
             idx = _LOOP_BODY_ARG[name]
             if len(node.args) <= idx:
@@ -562,12 +522,98 @@ class BlockingCollectiveInLoop(Rule):
                             f"ppermute dataflow or hoist it out of the "
                             f"loop")
 
-    def _lax_imports(self, tree) -> set[str]:
-        names: set[str] = set()
-        for node in ast.walk(tree):
-            if isinstance(node, ast.ImportFrom) and node.module == "jax.lax":
-                names.update(a.asname or a.name for a in node.names)
-        return names
+
+# ---------------------------------------------------------------- DIST003
+@register
+class RingScheduleMismatch(Rule):
+    """DIST003 — ppermute pipeline whose composed schedule strands
+    shards (the static analogue of a ring deadlock).
+
+    For a LITERAL ppermute perm inside a ``lax.scan``/``fori_loop``
+    body, :mod:`schedule` composes the permutation symbolically across
+    the loop's trip count. Fires when:
+
+    * the perm over W ranks is not a single W-cycle — shards circulate
+      inside disjoint sub-rings and part of the axis starves no matter
+      how long the loop runs; or
+    * the literal trip count T satisfies ``T % W not in (0, W-1)`` —
+      after T rotations every shard sits ``T mod W`` ranks from home,
+      which is neither the complete traversal of an all-gather pipeline
+      (W-1 steps) nor a full cycle home (multiples of W, reduce-scatter
+      rings): a chunk-count vs. axis-size mismatch.
+
+    Trip counts come from literal ``fori_loop`` bounds, ``scan(...,
+    length=N)``, or ``scan`` over a provenance-resolved ``arange``.
+    Dynamic perms/trip counts (the repo's comprehension-built rings)
+    are out of static reach and pass.
+    """
+
+    id = "DIST003"
+    tax = "bulk-synchronous overlap (pipeline schedules must add up)"
+    title = "composed ppermute schedule never returns shards home"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        defs = function_defs(ctx.tree)
+        lax_names = lax_imported_names(ctx.tree)
+        seen: set[int] = set()
+        scopes = [(fn, _Provenance(fn)) for fn in ast.walk(ctx.tree)
+                  if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        scopes.append((ctx.tree, None))
+        for scope, prov in scopes:
+            for node in ast.walk(scope):
+                if not isinstance(node, ast.Call) or id(node) in seen:
+                    continue
+                name = is_lax_call(
+                    node, frozenset({"scan", "fori_loop"}), lax_names)
+                if name is None:
+                    continue
+                seen.add(id(node))
+                idx = _LOOP_BODY_ARG[name]
+                if len(node.args) <= idx:
+                    continue
+                body = resolve_body(node.args[idx], defs)
+                if body is None:
+                    continue
+                for where, msg in check_ring_schedule(
+                        node, name, body, prov):
+                    yield ctx.finding(self.id, where, msg)
+
+
+# ---------------------------------------------------------------- DIST004
+@register
+class BranchCollectiveDivergence(Rule):
+    """DIST004 — collective sequences diverge across branch arms
+    inside one shard_map region.
+
+    Inside a locally-resolvable ``shard_map`` body, the arms of a
+    ``lax.cond`` / ``lax.switch`` must issue the SAME source-ordered
+    sequence of collectives (op + literal axis): if the predicate is
+    not uniform across the mapped axis, ranks taking different arms
+    post mismatched collectives — a distributed deadlock at worst,
+    silently corrupted reductions at best. (XLA requires cross-replica
+    collective programs to agree; a per-shard data-dependent predicate
+    breaks that contract in exactly this shape.)
+
+    Arms that cannot be resolved statically (dynamic callables) pass.
+    A predicate that is PROVABLY uniform across the axis (e.g. a
+    scalar closed over from outside the mapped region) earns a
+    justified suppression stating that proof.
+    """
+
+    id = "DIST004"
+    tax = "bulk-synchronous overlap (ranks must agree on the schedule)"
+    title = "collective sequences diverge across cond/switch arms"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        defs = function_defs(ctx.tree)
+        lax_names = lax_imported_names(ctx.tree)
+        reported: set[int] = set()
+        for _, body in shard_map_regions(ctx.tree):
+            for where, msg in check_branch_divergence(
+                    body, defs, lax_names):
+                if id(where) not in reported:
+                    reported.add(id(where))
+                    yield ctx.finding(self.id, where, msg)
 
 
 # ----------------------------------------------------------------- PL001
@@ -656,7 +702,3 @@ class PallasHygiene(Rule):
                 and out_shape.args:
             return const_int_tuple(out_shape.args[0])
         return None
-
-
-# re-exported for tests / docs tooling
-from repro.analysis.core import Finding  # noqa: E402,F401

@@ -1,0 +1,271 @@
+"""taxprove collective-schedule verification for shard_map regions.
+
+The paper replaces global barriers with fine-grained pipelines of
+``ppermute`` chunks, which makes the *schedule* of collectives the
+correctness-critical artifact: a ring that rotates the wrong number of
+times leaves shards stranded on the wrong rank, and branch arms that
+issue different collectives deadlock the ranks that disagree.  Both
+properties are statically checkable when the perm and the trip count
+are literals — the static analogue of a ring deadlock.
+
+Two checks, consumed by the DIST003/DIST004 rule wrappers in
+:mod:`rules`:
+
+* :func:`check_ring_schedule` — for a literal ``ppermute`` perm inside
+  a ``lax.scan`` / ``fori_loop`` body, symbolically compose the
+  permutation across the loop's trip count.  Fires when the perm over
+  ``W`` ranks is not a single W-cycle (shards never visit every rank,
+  no trip count can fix it) or when a literal trip count ``T`` is
+  neither ``W-1`` nor ``0`` modulo ``W`` (after ``T`` rotations each
+  shard sits ``T mod W`` ranks from home: not the complete-traversal
+  position of an all-gather pipeline, not back home like a
+  reduce-scatter ring — a chunk-count vs. axis-size mismatch).
+* :func:`check_branch_divergence` — inside a locally-resolvable
+  ``shard_map`` body, ``lax.cond``/``lax.switch`` arms must issue the
+  SAME source-ordered collective sequence: if the predicate is not
+  uniform across the mapped axis, ranks taking different arms post
+  mismatched collectives — a deadlock at worst, silent corruption at
+  best.  A provably-uniform predicate earns a justified suppression.
+
+Dynamically-built perms and trip counts (the repo's comprehension
+style) are out of static reach and pass — conservative by design.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.callgraph import (
+    Provenance, call_parts, const_int, const_int_tuple, keyword,
+    resolve_body,
+)
+
+BLOCKING_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather",
+                        "all_to_all", "psum_scatter"}
+SEQUENCED_COLLECTIVES = BLOCKING_COLLECTIVES | {"ppermute"}
+LOOP_BODY_ARG = {"scan": 0, "fori_loop": 2, "while_loop": 1}
+
+
+def lax_imported_names(tree) -> set[str]:
+    """Names imported directly from jax.lax — gates bare-name calls so
+    foreign ``.scan()`` methods don't masquerade as lax loops."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "jax.lax":
+            names.update(a.asname or a.name for a in node.names)
+    return names
+
+
+def is_lax_call(call: ast.Call, names: frozenset | set,
+                lax_imports: set[str]) -> str | None:
+    """The lax operation name if this call is ``lax.X``/``jax.lax.X``
+    or a bare ``X`` imported from jax.lax, for X in ``names``."""
+    parts = call_parts(call)
+    name = parts[-1] if parts else None
+    if name not in names:
+        return None
+    if len(parts) > 1 and "lax" not in parts[:-1]:
+        return None
+    if len(parts) == 1 and name not in lax_imports:
+        return None
+    return name
+
+
+# --------------------------------------------------------------- DIST003
+def literal_perm(call: ast.Call) -> list[tuple[int, int]] | None:
+    """The literal (src, dst) pairs of a ppermute call, or None when
+    any part is dynamic."""
+    perm = call.args[2] if len(call.args) > 2 else keyword(call, "perm")
+    if not isinstance(perm, (ast.List, ast.Tuple)):
+        return None
+    pairs = []
+    for e in perm.elts:
+        if isinstance(e, (ast.Tuple, ast.List)):
+            pair = const_int_tuple(e)
+            if pair is None or len(pair) != 2:
+                return None
+            pairs.append(pair)
+        else:
+            return None
+    return pairs
+
+
+def ring_cycle_length(pairs: list[tuple[int, int]]) -> int | None:
+    """Length of the permutation cycle containing rank 0, for a full
+    permutation of {0..W-1}; None when the pairs are not a full
+    permutation (partial perms are out of scope here — DIST001 already
+    polices bijectivity)."""
+    w = len(pairs)
+    mapping = dict(pairs)
+    if set(mapping) != set(range(w)) \
+            or {d for _, d in pairs} != set(range(w)):
+        return None
+    node, steps = 0, 0
+    while True:
+        node = mapping[node]
+        steps += 1
+        if node == 0 or steps > w:
+            return steps
+
+
+def loop_trip_count(call: ast.Call, name: str,
+                    prov: Provenance | None) -> int | None:
+    """Literal trip count of a lax loop call, or None.
+
+    * ``fori_loop(lo, hi, ...)`` with literal bounds -> hi - lo;
+    * ``scan(..., length=N)`` with a literal N;
+    * ``scan(f, init, xs)`` where xs is ``arange(N)``/``arange(a, b)``
+      or a name whose last assignment is one (provenance chase).
+    """
+    if name == "fori_loop" and len(call.args) >= 2:
+        lo, hi = const_int(call.args[0]), const_int(call.args[1])
+        if lo is not None and hi is not None:
+            return hi - lo
+        return None
+    if name != "scan":
+        return None
+    length = keyword(call, "length")
+    n = const_int(length)
+    if n is not None:
+        return n
+    xs = call.args[2] if len(call.args) > 2 else keyword(call, "xs")
+    return _xs_length(xs, call.lineno, prov)
+
+
+def _xs_length(xs, line: int, prov: Provenance | None,
+               depth: int = 0) -> int | None:
+    if isinstance(xs, ast.Call):
+        parts = call_parts(xs)
+        if parts[-1:] == ["arange"]:
+            if len(xs.args) == 1:
+                return const_int(xs.args[0])
+            if len(xs.args) >= 2:
+                a, b = const_int(xs.args[0]), const_int(xs.args[1])
+                if a is not None and b is not None:
+                    return b - a
+        return None
+    if isinstance(xs, ast.Name) and prov is not None and depth < 4:
+        rhs = prov.rhs_at(xs.id, line)
+        if rhs is not None:
+            return _xs_length(rhs, line, prov, depth + 1)
+    return None
+
+
+def check_ring_schedule(loop_call: ast.Call, loop_name: str, body,
+                        prov: Provenance | None
+                        ) -> Iterator[tuple[ast.AST, str]]:
+    """DIST003 core: yields (node, message) for ppermute pipelines in a
+    resolved loop body whose composed permutation strands shards."""
+    trips = loop_trip_count(loop_call, loop_name, prov)
+    for node in ast.walk(body):
+        if not isinstance(node, ast.Call) \
+                or call_parts(node)[-1:] != ["ppermute"]:
+            continue
+        pairs = literal_perm(node)
+        if pairs is None:
+            continue
+        w = len(pairs)
+        cycle = ring_cycle_length(pairs)
+        if cycle is None:
+            continue                      # not a full perm: DIST001's job
+        if cycle != w:
+            yield (node,
+                   f"ppermute perm {pairs} decomposes into cycles of "
+                   f"length {cycle} over {w} ranks — composing it never "
+                   f"circulates shards across the whole axis, so part "
+                   f"of the ring starves no matter the trip count; use "
+                   f"a single {w}-cycle (i -> (i+1) % {w})")
+        elif trips is not None and trips % w not in (0, w - 1):
+            home = trips % w
+            yield (loop_call,
+                   f"{loop_name} runs {trips} iterations over a "
+                   f"{w}-rank ppermute ring: after {trips} rotations "
+                   f"each shard sits {home} ranks from home — neither "
+                   f"the {w - 1} steps of an all-gather pipeline nor a "
+                   f"multiple of {w} (reduce-scatter ring home) — a "
+                   f"chunk-count vs. axis-size mismatch; run {w - 1} or "
+                   f"{w} steps per pass")
+
+
+# --------------------------------------------------------------- DIST004
+def _collective_sequence(body, lax_imports: set[str]
+                         ) -> list[tuple[str, str | None]]:
+    """Source-ordered (collective, literal axis or None) sequence
+    issued by an arm body."""
+    hits = []
+    for node in ast.walk(body):
+        if not isinstance(node, ast.Call):
+            continue
+        name = is_lax_call(node, SEQUENCED_COLLECTIVES, lax_imports)
+        if name is None:
+            # collectives reached through jax.lax.* OR any *.ppermute
+            # style alias: fall back to the bare-suffix match used by
+            # DIST001/DIST002 so wrappers like jax_compat don't hide
+            parts = call_parts(node)
+            if parts and parts[-1] in SEQUENCED_COLLECTIVES:
+                name = parts[-1]
+            else:
+                continue
+        axis = (node.args[1] if len(node.args) > 1
+                else keyword(node, "axis_name") or keyword(node, "axis"))
+        lit = axis.value if isinstance(axis, ast.Constant) \
+            and isinstance(axis.value, str) else None
+        hits.append((node.lineno, node.col_offset, name, lit))
+    return [(n, a) for _, _, n, a in sorted(hits)]
+
+
+def _render_seq(seq: list[tuple[str, str | None]]) -> str:
+    if not seq:
+        return "[]"
+    return "[" + ", ".join(
+        f"{n}({a!r})" if a is not None else f"{n}(...)"
+        for n, a in seq) + "]"
+
+
+def check_branch_divergence(region_body, defs, lax_imports: set[str]
+                            ) -> Iterator[tuple[ast.AST, str]]:
+    """DIST004 core: yields (node, message) for cond/switch calls in a
+    shard_map body whose arms issue different collective sequences."""
+    for node in ast.walk(region_body):
+        if not isinstance(node, ast.Call):
+            continue
+        name = is_lax_call(node, frozenset({"cond", "switch"}),
+                           lax_imports)
+        if name is None:
+            continue
+        if name == "cond":
+            arm_nodes = node.args[1:3]
+        else:
+            arms_arg = node.args[1] if len(node.args) > 1 else None
+            if not isinstance(arms_arg, (ast.List, ast.Tuple)):
+                continue
+            arm_nodes = list(arms_arg.elts)
+        if len(arm_nodes) < 2:
+            continue
+        arms = [resolve_body(a, defs) for a in arm_nodes]
+        if any(a is None for a in arms):
+            continue                      # dynamic arm: unknowable
+        seqs = [_collective_sequence(a, lax_imports) for a in arms]
+        if any(s != seqs[0] for s in seqs[1:]):
+            rendered = " vs ".join(_render_seq(s) for s in seqs)
+            yield (node,
+                   f"lax.{name} arms inside a shard_map region issue "
+                   f"diverging collective sequences: {rendered} — ranks "
+                   f"whose predicate differs post mismatched "
+                   f"collectives (deadlock or silent corruption); issue "
+                   f"identical collective schedules in every arm, or "
+                   f"suppress with the proof that the predicate is "
+                   f"uniform across the mapped axis")
+
+
+def shard_map_regions(tree) -> Iterator[tuple[ast.Call, ast.AST]]:
+    """(shard_map call, resolved body) for every locally-resolvable
+    mapped region in a file."""
+    from repro.analysis.callgraph import function_defs
+    defs = function_defs(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and call_parts(node)[-1:] == ["shard_map"] and node.args:
+            body = resolve_body(node.args[0], defs)
+            if body is not None:
+                yield node, body
