@@ -366,6 +366,91 @@ def _bench_ci_megatick(K=4):
     }
 
 
+def _bench_ci_mixed(K=4):
+    """Mixed-megatick leg of the CI gate: a STAGGERED-ARRIVAL open-loop
+    workload — new prompts keep arriving while earlier slots decode, so
+    prefill is in flight for most of the run and the pure-decode
+    megatick alone cannot engage (the exact case the lockstep gate
+    above cannot see). STRUCTURAL: the COMBINED decode
+    dispatches-per-token (pure + mixed fused dispatches over all decode
+    tokens) must stay <= 1/K, the mixed program must actually have
+    carried prompt tokens, and the K-step streams must be
+    token-identical to the single-step engine. Returns the report
+    fragment."""
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm as lm_mod
+    from repro.serving.engine import Engine, Request
+
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=1)
+    params = lm_mod.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(8)
+    prompts = [list(rng.integers(1, cfg.vocab_size, 6)) for _ in range(8)]
+    streams, counts, prompt_toks = {}, None, 0
+    for k in (1, K):
+        eng = Engine(params, cfg, batch=4, max_len=64, prefill_chunk=8,
+                     decode_steps=k)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=[int(t) for t in p],
+                               max_new_tokens=16), at_tick=2 * i)
+        done = eng.run()
+        streams[k] = {r.rid: tuple(r.out_tokens) for r in done}
+        if k == K:
+            counts = (eng.decode_dispatch_count
+                      + eng.mixed_dispatch_count,
+                      eng.decode_token_count
+                      + eng.mixed_decode_token_count)
+            prompt_toks = eng.mixed_prompt_token_count
+    dpt = counts[0] / max(counts[1], 1)
+    return {
+        "mixed_check": "staggered-arrival (prefill in flight) combined "
+                       "decode dispatches-per-token <= 1/K",
+        "mixed_ok": bool(dpt <= 1.0 / K and prompt_toks > 0
+                         and streams[1] == streams[K]),
+        "mixed_dispatches_plus_decode": int(counts[0]),
+        "mixed_plus_decode_tokens": int(counts[1]),
+        "mixed_prompt_tokens": int(prompt_toks),
+        "mixed_dispatches_per_token": round(dpt, 4),
+        "mixed_bound": round(1.0 / K, 4),
+        "mixed_tokens_match_single_step": bool(
+            streams[1] == streams[K]),
+    }
+
+
+def bench_mixed_megatick():
+    """Mixed prefill+decode megaticks under staggered arrivals: the
+    open-loop steady state where PR 5's pure megaticks bailed out to
+    one dispatch per token. K=1 is the single-step anchor; K>1 runs
+    the fused mixed program (``lm.decode_mixed``) whenever prefill is
+    in flight. Derived columns are STRUCTURAL, from the engine's own
+    counters: combined decode dispatches-per-token (pure + mixed) and
+    the prompt-vs-decode token split of the mixed dispatches."""
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm as lm_mod
+    from repro.serving.engine import Engine, Request
+
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=2)
+    params = lm_mod.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    prompts = [list(rng.integers(1, cfg.vocab_size, 8)) for _ in range(8)]
+    for K in (1, 4, 8):
+        eng = Engine(params, cfg, batch=4, max_len=128, prefill_chunk=8,
+                     decode_steps=K)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=[int(t) for t in p],
+                               max_new_tokens=33), at_tick=3 * i)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        m = eng.metrics(done)
+        print(f"serve_mixed_megatick_K{K},{dt * 1e6:.1f},"
+              f"tok_per_s={m['new_tokens'] / dt:.1f};"
+              f"combined_dispatches_per_decode_token="
+              f"{m['decode_dispatches_per_token']};"
+              f"mixed_dispatches={m['mixed_dispatches']};"
+              f"mixed_prompt_tokens={m['mixed_prompt_tokens']};"
+              f"mixed_decode_tokens={m['mixed_decode_tokens']}")
+
+
 def bench_ci(out_path="BENCH_ci.json"):
     """Per-PR CI perf gate (bench-smoke job): tiny interpret-friendly
     shapes, STRUCTURAL assertions only, so CPU runners stay
@@ -379,6 +464,12 @@ def bench_ci(out_path="BENCH_ci.json"):
     Gate 2 (decode megaticks): steady-state decode dispatches-per-token
     <= 1/K, counted from the engine's own counters, with the K-step
     streams token-identical to the single-step engine.
+
+    Gate 3 (mixed megaticks): the same 1/K bound under a
+    STAGGERED-ARRIVAL open-loop workload — prefill always in flight,
+    the case gate 2 cannot see — from the COMBINED pure+mixed
+    counters, with prompt tokens actually carried by the fused mixed
+    program and streams token-identical to the single-step engine.
 
     Writes BENCH_ci.json and exits nonzero on any violation."""
     n = len(jax.devices())
@@ -417,6 +508,7 @@ def bench_ci(out_path="BENCH_ci.json"):
         "check": "paged-bounded per-slot work <= max_blocks*block_size",
         "ok": bool(scored_b <= bound),
         **_bench_ci_megatick(),
+        **_bench_ci_mixed(),
         "bounded_per_slot_scored": int(scored_b),
         "masked_per_slot_scored": int(scored_m),
         "bound_max_blocks_x_block_size": int(bound),
@@ -434,7 +526,9 @@ def bench_ci(out_path="BENCH_ci.json"):
     print(f"bench_ci,{times['bounded']:.1f},"
           f"per_slot_scored={scored_b};bound={bound};ok={report['ok']};"
           f"megatick_dpt={report['megatick_dispatches_per_token']};"
-          f"megatick_ok={report['megatick_ok']}")
+          f"megatick_ok={report['megatick_ok']};"
+          f"mixed_dpt={report['mixed_dispatches_per_token']};"
+          f"mixed_ok={report['mixed_ok']}")
     if not report["ok"]:
         sys.exit(f"paged-bounded per-slot work {scored_b} exceeds "
                  f"bound {bound}")
@@ -444,6 +538,13 @@ def bench_ci(out_path="BENCH_ci.json"):
             f"{report['megatick_dispatches_per_token']} vs bound "
             f"{report['megatick_bound']}, tokens_match="
             f"{report['megatick_tokens_match_single_step']}")
+    if not report["mixed_ok"]:
+        sys.exit(
+            f"mixed-megatick gate: combined dispatches-per-token "
+            f"{report['mixed_dispatches_per_token']} vs bound "
+            f"{report['mixed_bound']}, prompt_tokens="
+            f"{report['mixed_prompt_tokens']}, tokens_match="
+            f"{report['mixed_tokens_match_single_step']}")
 
 
 def bench_pallas_ag_gemm(W=4):
@@ -470,6 +571,7 @@ if __name__ == "__main__":
         bench_serving_engine()
     if which in ("all", "megatick"):
         bench_decode_megatick()
+        bench_mixed_megatick()
     if which in ("all", "paged"):
         bench_paged_capacity()
     if which in ("all", "bounded"):

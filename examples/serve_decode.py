@@ -29,12 +29,18 @@ produce.
 ``--deadline-ms`` tags every third request with that TTFT target (the
 rest stay best-effort), so the slo policy has a mixed population to
 reorder.
-``--decode-steps`` sets the decode megatick length K: once no slot is
-prefilling, ONE jitted dispatch runs K decode steps with sampling
-device-resident, so the host stops paying a launch plus a full-logits
-round-trip per generated token (the demo defaults to 4; 1 is the
-byte-identical single-step path). Watch ``tokens_per_dispatch`` in the
-printed metrics rise with K.
+``--decode-steps`` sets the decode megatick length K: ONE jitted
+dispatch runs K decode steps with sampling device-resident, so the
+host stops paying a launch plus a full-logits round-trip per generated
+token (the demo defaults to 4; 1 is the byte-identical single-step
+path). Batches with prefill in flight take the fused MIXED program —
+prompt chunks piggyback on the decode scan, so the staggered arrivals
+below never degrade the batch back to one dispatch per token; watch
+``tokens_per_dispatch`` and the mixed counters
+(``mixed_dispatches``/``mixed_prompt_tokens``/``mixed_decode_tokens``)
+in the printed metrics. ``--megatick-token-budget`` caps the per-slot
+token quota of a mixed tick (prompt + piggybacked decode; default
+``max(decode_steps, prefill_chunk)``).
 """
 import argparse
 import os
@@ -65,6 +71,10 @@ def main():
                    help="decode megatick length K (jitted decode steps "
                         "per dispatch, sampled on device; 1 = the "
                         "single-step path)")
+    p.add_argument("--megatick-token-budget", type=int, default=None,
+                   help="per-slot token quota of a mixed megatick "
+                        "(prompt + piggybacked decode tokens; default "
+                        "max(decode-steps, prefill-chunk))")
     args = p.parse_args()
 
     cfg = smoke_config(get_config("llama3-8b"))
@@ -75,7 +85,8 @@ def main():
     # mix does outgrow it, the scheduler preempts instead of failing
     eng = Engine(params, cfg, batch=4, max_len=256, prefill_chunk=8,
                  block_size=16, n_blocks=24, scheduler=args.scheduler,
-                 decode_steps=args.decode_steps)
+                 decode_steps=args.decode_steps,
+                 megatick_token_budget=args.megatick_token_budget)
 
     rng = jax.random.PRNGKey(1)
     rng, ks = jax.random.split(rng)
@@ -117,6 +128,12 @@ def main():
           f"{m['decode_tokens']} decode tokens over "
           f"{m['decode_dispatches']} pure-decode dispatches "
           f"({m['tokens_per_dispatch']} tokens/dispatch)")
+    print(f"mixed megaticks: {m['mixed_dispatches']} fused "
+          f"prefill+decode dispatches consumed "
+          f"{m['mixed_prompt_tokens']} prompt tokens and emitted "
+          f"{m['mixed_decode_tokens']} decode tokens "
+          f"(combined {m['decode_dispatches_per_token']} decode "
+          f"dispatches/token)")
     print(f"engine metrics: {m}")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"  req {r.rid}: reused {r.reused_tokens} prompt tokens, "

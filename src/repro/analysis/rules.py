@@ -43,9 +43,11 @@ _SYNC_NP_MODULES = SYNC_NP_MODULES        # back-compat alias
 # host syncs at init/metrics time are free.
 HOT_FUNCTIONS = {
     "serving/engine.py": frozenset(
-        {"tick", "_tick", "_megatick", "_next_tokens", "run"}),
+        {"tick", "_tick", "_megatick", "_megatick_mixed",
+         "_next_tokens", "run"}),
     "models/lm.py": frozenset(
-        {"decode_step", "decode_chunk", "decode_multi"}),
+        {"decode_step", "decode_chunk", "decode_multi",
+         "decode_mixed"}),
 }
 
 
@@ -294,14 +296,20 @@ class UnbucketedStaticJitArg(Rule):
 # function name): (max jitted dispatches, max host readbacks) reachable
 # per CALL — the compile-time face of the BENCH_ci 1/K gate.
 #
-# serving/engine.py contract (PR 5, decode_steps=K megaticks):
+# serving/engine.py contract (PR 5 decode_steps=K megaticks, PR 8
+# mixed prefill+decode megaticks):
 #   _megatick — ONE fused _stepK dispatch + ONE (B, K) sampled-token
 #     readback per K decode steps = the 1/K bound itself;
+#   _megatick_mixed — ONE fused _stepM dispatch (prompt chunks
+#     piggybacking on the decode scan) + ONE (B, S) sampled-token
+#     readback, so the 1/K bound survives prefill in flight;
 #   _tick — the single-step path: one _step1/_stepC dispatch (branch
-#     max) plus _next_tokens' one sampler dispatch + one readback.
+#     max) plus _next_tokens' one sampler dispatch + one readback
+#     (the K>1 branches return early into the budgeted megaticks).
 DISPATCH_BUDGETS = {
     "serving/engine.py": {
         "_megatick": (1, 1),
+        "_megatick_mixed": (1, 1),
         "_tick": (2, 1),
     },
 }

@@ -34,11 +34,18 @@ def main(argv=None):
     p.add_argument("--prefill-chunk", type=int, default=8,
                    help="prompt tokens consumed per slot per tick")
     p.add_argument("--decode-steps", type=int, default=1,
-                   help="decode megatick length K: when no slot is "
-                        "prefilling, one jitted dispatch runs K decode "
-                        "steps with sampling device-resident, returning "
-                        "(B, K) token ids instead of K logit tensors "
+                   help="decode megatick length K: one jitted dispatch "
+                        "runs K decode steps with sampling "
+                        "device-resident, returning token ids instead "
+                        "of K logit tensors; batches with prefill in "
+                        "flight take the fused mixed program "
                         "(1 = the byte-identical single-step path)")
+    p.add_argument("--megatick-token-budget", type=int, default=None,
+                   help="per-slot token quota of a MIXED megatick "
+                        "(prompt tokens + piggybacked decode steps per "
+                        "slot per dispatch); default "
+                        "max(decode-steps, prefill-chunk), must be >= "
+                        "decode-steps")
     p.add_argument("--stagger", type=int, default=0,
                    help="admit request i no earlier than tick i*STAGGER "
                         "(0 = all at once)")
@@ -103,6 +110,7 @@ def main(argv=None):
                      block_size=args.block_size, n_blocks=args.kv_blocks,
                      scheduler=args.scheduler,
                      decode_steps=args.decode_steps,
+                     megatick_token_budget=args.megatick_token_budget,
                      bounded_gather=args.paged_gather == "bounded")
         rng = jax.random.PRNGKey(args.seed + 1)
         for i in range(args.requests):

@@ -360,3 +360,82 @@ def decode_multi(params, token, state, cfg, *, steps: int, budgets,
     (state, _), out = jax.lax.scan(body, (state, token),
                                    jnp.arange(steps))
     return out.T, state
+
+
+def decode_mixed(params, tokens, token0, prefill_lens, emit_from, totals,
+                 state, cfg, *, steps, sample_fn,
+                 gather_width: int | None = None, bounded: bool = True):
+    """Mixed prefill+decode megatick: ONE jitted scan in which every
+    slot carries a per-step ROLE — consume the next prompt token, or
+    sample-and-feed-back — so chunked prefill piggybacks on the fused
+    decode dispatch instead of bailing the whole batch out to
+    one-launch-per-token whenever any slot is mid-prompt (the paper's
+    kernel-launch tax, which :func:`decode_multi` only eliminated for
+    pure-decode batches). Sampling stays device-resident; only the
+    (B, steps) sampled-token ids return to host.
+
+    Per slot ``b``, scan step ``j`` runs exactly one of three roles:
+
+    * ``j < prefill_lens[b]`` — PREFILL: the step consumes prompt token
+      ``tokens[b, j]`` (left-aligned; the engine fills the row with the
+      slot's next unconsumed effective-prompt tokens);
+    * ``prefill_lens[b] <= j < totals[b]`` — DECODE: the step consumes
+      the carry token (the previously sampled one; ``token0[b]`` seeds
+      it for slots that enter the megatick already decoding);
+    * ``j >= totals[b]`` — FROZEN: the ``active`` mask leaves caches,
+      recurrent state, and ``cur_len`` byte-identical, exactly like an
+      idle slot in :func:`decode_step`.
+
+    Sampling fires on steps ``emit_from[b] <= j < totals[b]``. The
+    engine sets ``emit_from`` to ``prefill_lens - 1`` (floored at 0)
+    for slots whose prompt COMPLETES inside this megatick — so a slot
+    that consumes its last prompt token at step j samples its first
+    output token at step j, not next tick, exactly matching the
+    unfused path's emit-on-prefill-completion — and to ``totals`` for
+    slots still mid-prompt at megatick end (no emission). Pure-decode
+    slots get ``prefill_lens == 0`` and ``emit_from == 0``:
+    :func:`decode_multi` semantics as the degenerate case.
+
+    tokens:       (B, S) int32 prompt tokens, left-aligned per row.
+    token0:       (B, 1) int32 initial carry (a decoding slot's last
+                  sampled token; ignored for rows that start in the
+                  prefill role).
+    prefill_lens: (B,) int32 — prompt tokens this megatick consumes.
+    emit_from:    (B,) int32 — first step whose logits are sampled.
+    totals:       (B,) int32 — total steps (= KV writes) per slot; the
+                  caller must have reserved blocks for ALL of them
+                  (``CachePool.reserve`` covers prompt and decode
+                  writes alike).
+    steps:        STATIC scan length S >= max(totals) (pow2-bucketed by
+                  the serving layer, bounding recompiles).
+    sample_fn:    ``(logits (B, 1, V), j) -> (B, 1) int32`` in-graph
+                  sampler; the engine's closure offsets each slot's
+                  (seed, rid, token-index) key fold by ``j -
+                  emit_from``, so emitted streams stay scheduling-
+                  independent — token-identical to the single-step
+                  engine whatever the prefill/decode interleaving.
+
+    Returns (out (B, steps) int32, new_state). Row b's emitted tokens
+    are ``out[b, emit_from[b]:totals[b]]``; entries outside that span
+    are stale carry values and must be ignored.
+
+    ``gather_width``/``bounded`` follow the :func:`decode_step`
+    contract; the width must cover every block the whole megatick
+    writes (prompt chunks included).
+    """
+    def body(carry, j):
+        st, tok = carry
+        act = j < totals
+        inp = jnp.where((j < prefill_lens)[:, None],
+                        tokens[:, j][:, None], tok)
+        logits, st = decode_step(params, inp, st, cfg, active=act,
+                                 gather_width=gather_width,
+                                 bounded=bounded)
+        emit = (j >= emit_from) & act
+        nxt = sample_fn(logits, j)
+        tok = jnp.where(emit[:, None], nxt, tok)
+        return (st, tok), tok[:, 0]
+
+    (state, _), out = jax.lax.scan(body, (state, token0),
+                                   jnp.arange(steps))
+    return out.T, state

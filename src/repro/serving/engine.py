@@ -43,41 +43,69 @@ MEGATICKS (``decode_steps=K``, default 1): the per-token loop above
 re-levies two of the paper's taxes at token granularity — one jitted
 launch per generated token, plus a bulk host<->device barrier that
 ships full (B, V) logits down and the sampled token back up every
-tick. When every active slot is decoding (no prefill in flight), a
-K-step engine instead runs ONE fused jitted program of K decode steps
-with sampling DEVICE-RESIDENT (``lm.decode_multi``): each step's
-sampled token feeds the next step inside the scan, and only (B, K)
-token ids return to host. Megatick semantics:
+tick. A K-step engine instead fuses many steps into ONE jitted program
+with sampling DEVICE-RESIDENT, in one of two shapes:
+
+* PURE megatick (``lm.decode_multi``, when no slot is prefilling):
+  K decode steps in one scan — each step's sampled token feeds the
+  next step in-graph, and only (B, K) token ids return to host.
+* MIXED megatick (``lm.decode_mixed``, whenever any slot is
+  prefilling): chunked-prefill PIGGYBACKING, Sarathi/vLLM-style. Each
+  slot carries a per-step ROLE inside the same scan: steps below its
+  prompt watermark consume the next prompt token from a host-provided
+  (B, S) buffer; later steps feed back the sampled carry; steps past
+  its budget freeze under the active mask. A slot that consumes its
+  LAST prompt token at step j samples its FIRST generated token at
+  step j — in the same dispatch — so prefill→decode transitions are
+  token-identical to the unfused path and TTFT never waits for a
+  megatick boundary. Decode-only slots run their K steps alongside, so
+  one long prompt no longer degrades the whole batch back to one
+  dispatch per token.
+
+Megatick semantics (both shapes):
 
 * one megatick is ONE scheduler tick and ONE dispatch — admission,
   arrival ticks, preemption checks, prefix registration, and
   sliding-window reclaim all happen at megatick BOUNDARIES;
-* every slot gets a per-megatick step budget
+* every slot gets a per-megatick token budget. Pure decode:
   ``min(K, remaining max_new_tokens, max_len headroom, blocks the
-  pool can reserve)`` (``CachePool.reserve`` pre-allocates the blocks
-  the whole megatick will write); a slot that exhausts its budget at
-  step j < K freezes byte-identically for the remaining steps, exactly
-  like an inactive slot today. If every slot's budget is 0, the engine
-  preempts the policy's victim, as the single-step path does;
-* the scan length is bucketed to the next power of two (clamped at K)
-  and threaded as a STATIC jit arg like ``gather_width``, so ragged
-  tail megaticks don't pay the full K while compiles stay bounded at
-  log2(K);
+  pool can reserve)``. Mixed: a per-slot quota of
+  ``megatick_token_budget`` tokens (default
+  ``max(decode_steps, prefill_chunk)``) is split prefill-first —
+  prompt tokens take ``min(quota, remaining prompt)``, and decode
+  steps piggyback only if the prompt completes within the quota
+  (capped at K and at the leftover quota). ``CachePool.reserve``
+  pre-allocates the blocks the WHOLE megatick will write, prompt and
+  decode together; a short reservation shrinks the prefill span first.
+  A slot that exhausts its budget at step j freezes byte-identically
+  for the remaining steps, exactly like an inactive slot today. If
+  every slot's budget is 0, the engine preempts the policy's victim,
+  as the single-step path does;
+* the scan length is bucketed to the next power of two (clamped at K,
+  or at the token quota for mixed ticks) and threaded as a STATIC jit
+  arg like ``gather_width``, so ragged tail megaticks don't pay the
+  full length while compiles stay bounded at log2;
 * sampling in-scan uses the same (seed, rid, token-index)-folded keys
-  as the host path, so sampled streams stay scheduling-independent and
-  preemption-safe; greedy engines argmax in-graph;
+  as the host path — mixed ticks index by ``steps0 + j - emit_from``
+  so a slot's n-th generated token uses the n-th key no matter which
+  step emitted it — so sampled streams stay scheduling-independent
+  and preemption-safe; greedy engines argmax in-graph;
 * TTFT is unaffected (a request's first token is emitted by the tick
-  that completes its prefill, which is never a megatick); TPOT and
-  ``finished_t`` stamp at megatick boundaries, so sub-megatick
-  inter-token times are averaged over the K tokens of the batch that
-  produced them.
+  that completes its prefill — in mixed mode that is the very step
+  that consumed the last prompt token); TPOT and ``finished_t`` stamp
+  at megatick boundaries, so sub-megatick inter-token times are
+  averaged over the tokens of the batch that produced them.
 
 ``decode_steps=1`` is the regression anchor: it takes the exact
 single-step code path, byte-identical to the pre-megatick engine
 (pinned tick/dispatch counts). The ``tokens_per_dispatch`` metric and
 the ``decode_dispatches``/``decode_tokens`` counters expose the win
-structurally: steady-state decode costs <= 1/K dispatches per token
-(the CI bench gate asserts this from the counters, not wall-clock).
+structurally, and the ``mixed_dispatches``/``mixed_prompt_tokens``/
+``mixed_decode_tokens`` counters extend it to continuous arrivals:
+``decode_dispatches_per_token`` (pure + mixed dispatches over all
+decode tokens) stays <= 1/K at steady state even with prefill
+permanently in flight (the CI bench gates assert this from the
+counters, not wall-clock).
 
 Scheduling POLICY is pluggable (``scheduler=`` — a name or a
 ``repro.serving.scheduler.SchedulerPolicy`` instance; CLI flag
@@ -208,14 +236,24 @@ class Engine:
     fraction of the HBM; exhaustion under oversubscription preempts
     instead of failing.
 
-    ``decode_steps`` — decode megatick length K: when no slot is
-    prefilling, one jitted dispatch runs K decode steps with sampling
-    device-resident (``lm.decode_multi``), returning (B, K) token ids
-    instead of K full logit tensors. 1 (default) keeps the
-    byte-identical single-step path; larger K cuts steady-state decode
-    to <= 1/K dispatches per token while staying token-identical
-    (budgets freeze slots that finish mid-megatick; preemption and
-    sliding-window reclaim move to megatick boundaries).
+    ``decode_steps`` — decode megatick length K: one jitted dispatch
+    runs K decode steps with sampling device-resident, returning token
+    ids instead of K full logit tensors. Pure-decode batches take
+    ``lm.decode_multi``; batches with prefill in flight take the fused
+    MIXED program (``lm.decode_mixed``), where prompt chunks piggyback
+    on the same scan. 1 (default) keeps the byte-identical single-step
+    path; larger K cuts steady-state decode to <= 1/K dispatches per
+    token while staying token-identical (budgets freeze slots that
+    finish mid-megatick; preemption and sliding-window reclaim move to
+    megatick boundaries).
+
+    ``megatick_token_budget`` — per-slot token quota M of a MIXED
+    megatick (prompt tokens consumed + decode steps piggybacked per
+    slot per dispatch). Default ``max(decode_steps, prefill_chunk)``;
+    must be >= ``decode_steps`` so a decode-only slot can still run
+    its full K steps (else the 1/K dispatch bound cannot hold). Larger
+    M drains long prompts in fewer dispatches at the cost of more
+    work per dispatch (chunked-prefill knob, Sarathi-style).
 
     ``bounded_gather`` — distributed paged attention gathers each slot's
     referenced blocks through its table before scoring (per-slot work
@@ -232,6 +270,7 @@ class Engine:
                  n_blocks: int | None = None,
                  scheduler: str | SchedulerPolicy = "fcfs",
                  decode_steps: int = 1,
+                 megatick_token_budget: int | None = None,
                  bounded_gather: bool = True):
         if sampler not in ("greedy", "temperature"):
             raise ValueError(f"unknown sampler {sampler!r}: "
@@ -239,6 +278,13 @@ class Engine:
         if decode_steps < 1:
             raise ValueError(f"decode_steps must be >= 1, "
                              f"got {decode_steps}")
+        if (megatick_token_budget is not None
+                and megatick_token_budget < decode_steps):
+            raise ValueError(
+                f"megatick_token_budget {megatick_token_budget} < "
+                f"decode_steps {decode_steps}: the per-slot quota must "
+                f"at least cover a full decode megatick, or the 1/K "
+                f"dispatch bound cannot hold")
         self.policy = get_scheduler(scheduler)   # fail fast, pre-pool-init
         self.params = params
         self.cfg = cfg
@@ -252,6 +298,10 @@ class Engine:
         self.sampler = sampler
         self._base_key = jax.random.PRNGKey(seed)
         self.decode_steps = int(decode_steps)
+        self.megatick_tokens = (int(megatick_token_budget)
+                                if megatick_token_budget is not None
+                                else max(self.decode_steps,
+                                         self.prefill_chunk))
         self.tick_count = 0
         self.dispatch_count = 0     # ticks that actually ran a jitted step
         self.preempt_count = 0      # victims evicted on pool exhaustion
@@ -260,6 +310,15 @@ class Engine:
         # those dispatches produced — dispatches-per-token is their ratio
         self.decode_dispatch_count = 0
         self.decode_token_count = 0
+        # mixed-megatick counters: fused dispatches that carried prompt
+        # chunks alongside (or instead of) decode steps, split into the
+        # prompt tokens consumed and the decode tokens emitted — with
+        # these, dispatches-per-decode-token stays measurable under
+        # continuous arrivals (prefill always in flight), where the
+        # pure-decode counters above never fire
+        self.mixed_dispatch_count = 0
+        self.mixed_prompt_token_count = 0
+        self.mixed_decode_token_count = 0
         self._seq = 0               # submission order stamp
         self.bounded_gather = bool(bounded_gather)
         # two jitted paths sharing the pool state: a 1-token step for
@@ -297,6 +356,28 @@ class Engine:
                                    bounded=bounded)
 
         self._stepK = jax.jit(_megatick_fn, static_argnums=(8, 9))
+
+        # the mixed prefill+decode megatick: one fused program in which
+        # each slot consumes its next prompt-chunk tokens and/or runs
+        # sample-fed decode steps (lm.decode_mixed). The sampler's
+        # per-slot token index is st0 + (j - e0): the slot's emitted
+        # count when the megatick started, offset by how many steps it
+        # has been emitting — identical to the key fold every other
+        # path uses, so streams stay scheduling-independent.
+        def _mixedtick_fn(p, toks, tok0, pl, e0, tot, s, rids, st0, tmp,
+                          tk, S, gw):
+            if in_scan:
+                def sample_fn(lg, j):
+                    return sampler_lib.sample_batch(lg, base_key, rids,
+                                                    st0 + j - e0, tmp, tk)
+            else:
+                def sample_fn(lg, j):
+                    return sampler_lib.greedy(lg)
+            return lm.decode_mixed(p, toks, tok0, pl, e0, tot, s, cfg,
+                                   steps=S, sample_fn=sample_fn,
+                                   gather_width=gw, bounded=bounded)
+
+        self._stepM = jax.jit(_mixedtick_fn, static_argnums=(11, 12))
         self._sample = jax.jit(sampler_lib.sample_batch)
         self._greedy = jax.jit(sampler_lib.greedy)
 
@@ -416,8 +497,13 @@ class Engine:
         self.tick_count += 1
         if not self.active:
             return []
-        if (self.decode_steps > 1
-                and not any(r.prefilling for r in self.active.values())):
+        if self.decode_steps > 1:
+            # megatick engines never fall back to one-dispatch-per-token:
+            # a batch with prefill in flight runs the fused MIXED program
+            # (prompt chunks piggyback on the decode scan), a pure-decode
+            # batch keeps the K-step fast path
+            if any(r.prefilling for r in self.active.values()):
+                return self._megatick_mixed()
             return self._megatick()
         C = self.prefill_chunk
         tok = np.zeros((self.batch, C), np.int32)
@@ -579,6 +665,137 @@ class Engine:
                 self._retire(slot, req, now, finished)
         return finished
 
+    def _megatick_mixed(self) -> list[Request]:
+        """One fused mixed prefill+decode dispatch (``lm.decode_mixed``):
+        runs whenever a K-step engine has ANY slot mid-prompt — the
+        production steady state under continuous arrivals, where the
+        pure-decode megatick cannot engage. Each slot gets a per-megatick
+        token quota of ``megatick_tokens`` (M) split between roles:
+
+        * a PREFILLING slot consumes ``p = min(M, remaining prompt)``
+          prompt tokens; if that completes its prompt, it samples its
+          first token at the step that consumed the last prompt token
+          (not next tick) and piggybacks up to
+          ``min(M - p, K, remaining max_new - 1, headroom)`` further
+          decode steps in the same dispatch;
+        * a DECODING slot runs its usual ``min(K, remaining max_new,
+          headroom)`` step budget.
+
+        One ``CachePool.reserve`` call per slot pre-allocates blocks for
+        ALL of the megatick's writes — prompt chunks and decode steps
+        alike — and a short reservation shrinks the prefill span first
+        (clamping decode piggybacking to zero), so the scan never writes
+        an unbacked position. Sampling is device-resident; the host gets
+        back (B, S) token ids, S pow2-bucketed and capped at M. If every
+        slot's reservation is 0, the policy's victim is preempted, as
+        every other dispatch path does."""
+        K = self.decode_steps
+        M = self.megatick_tokens
+        toks = np.zeros((self.batch, M), np.int32)
+        tok0 = np.zeros((self.batch, 1), np.int32)
+        pl = np.zeros((self.batch,), np.int32)     # prefill role steps
+        e0 = np.zeros((self.batch,), np.int32)     # first emitting step
+        tot = np.zeros((self.batch,), np.int32)    # total active steps
+        rids = np.zeros((self.batch,), np.int32)
+        steps0 = np.zeros((self.batch,), np.int32)
+        temps = np.zeros((self.batch,), np.float32)
+        topks = np.zeros((self.batch,), np.int32)
+        for slot, req in self.active.items():
+            headroom = self.max_len - 1 - int(self.pool.lengths[slot])
+            rem_new = req.max_new_tokens - len(req.out_tokens)
+            if req.prefilling:
+                rem_p = len(req.eff_prompt) - req.consumed
+                p_want = min(M, rem_p)
+                # decode piggybacking only when the prompt completes
+                # inside this megatick; the first sampled token is free
+                # (its KV write happens when it is consumed), so the
+                # decode span is capped at remaining max_new MINUS one
+                d_want = (max(0, min(M - p_want, K, rem_new - 1,
+                                     headroom - p_want))
+                          if p_want == rem_p else 0)
+            else:
+                rem_p = 0
+                p_want = 0
+                d_want = min(K, rem_new, headroom)
+            n = self.pool.reserve(slot, p_want + d_want)
+            p = min(n, p_want)
+            tot[slot] = n
+            pl[slot] = p
+            # emission starts at the step consuming the LAST prompt
+            # token (first sampled token rides its logits) — or at step
+            # 0 for slots already decoding; a slot whose prompt does
+            # not complete this megatick never emits (e0 == n)
+            e0[slot] = max(p - 1, 0) if p == rem_p else n
+            toks[slot, :p] = req.eff_prompt[req.consumed:req.consumed + p]
+            tok0[slot, 0] = (req.out_tokens[-1] if req.out_tokens
+                             else req.eff_prompt[-1])
+            rids[slot] = req.rid
+            steps0[slot] = len(req.out_tokens)
+            temps[slot] = req.temp
+            topks[slot] = req.top_k
+        nmax = int(tot.max(initial=0))
+        if nmax == 0:
+            # every slot stalled on block availability at the megatick
+            # boundary: preempt the policy's victim, as the other
+            # dispatch paths do
+            self._preempt_one()
+            return []
+        self.pool.sync()
+        # gather width AFTER the reserve() loop: the static slice must
+        # cover every block the whole megatick writes, prompt chunks
+        # included
+        gw = self.pool.gather_width()
+        # scan length bucketed to the next power of two, capped at the
+        # megatick token quota: jit specializations stay bounded at
+        # log2(M) while ragged ticks don't pay the full quota
+        S = pow2_bucket(nmax, M)
+        self.dispatch_count += 1
+        self.mixed_dispatch_count += 1
+        self.mixed_prompt_token_count += int(pl.sum())
+        out, self.pool.state = self._stepM(
+            self.params, jnp.asarray(toks[:, :S]), jnp.asarray(tok0),
+            jnp.asarray(pl), jnp.asarray(e0), jnp.asarray(tot),
+            self.pool.state, jnp.asarray(rids), jnp.asarray(steps0),
+            jnp.asarray(temps), jnp.asarray(topks), S, gw)
+        # taxlint: ignore[TAX001] the mixed megatick's ONE designed sync:
+        # (B, S) sampled-token ids — not per-step logit tensors — come
+        # back to drive Python-side scheduling; amortized over the
+        # megatick's prompt+decode tokens, this IS the 1/K bound under
+        # continuous arrivals
+        out = np.asarray(out)
+
+        finished = []
+        now = time.time()
+        for slot, req in list(self.active.items()):
+            n = int(tot[slot])
+            if n == 0:
+                continue
+            self.pool.advance(slot, n)
+            p = int(pl[slot])
+            if p:
+                req.consumed += p
+                # full prompt chunks just written become shareable
+                # prefix blocks, exactly as on a single-step tick
+                self.pool.register_prompt_chunks(slot, req.eff_prompt)
+            if self.cfg.sliding_window is not None:
+                self.pool.reclaim_out_of_window(slot,
+                                                self.cfg.sliding_window)
+            emitted = n - int(e0[slot])
+            if emitted > 0:
+                first = not req.out_tokens
+                req.out_tokens.extend(int(t)
+                                      for t in out[slot, int(e0[slot]):n])
+                self.mixed_decode_token_count += emitted
+                if first:
+                    req.first_token_t = now
+            cache_full = int(self.pool.lengths[slot]) + 1 >= self.max_len
+            if req.prefilling and not cache_full:
+                continue
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or cache_full):
+                self._retire(slot, req, now, finished)
+        return finished
+
     def _next_tokens(self, logits, emit):
         """Sample each emitting slot's next token. Greedy engines keep
         the PR-1 argmax path byte-identical; temperature engines fold
@@ -642,6 +859,21 @@ class Engine:
             "tokens_per_dispatch": round(
                 self.decode_token_count
                 / max(self.decode_dispatch_count, 1), 2),
+            # mixed-megatick counters: fused dispatches carrying prompt
+            # chunks, the prompt tokens they consumed, and the decode
+            # tokens they emitted — what makes the dispatch amortization
+            # visible under continuous arrivals
+            "mixed_dispatches": self.mixed_dispatch_count,
+            "mixed_prompt_tokens": self.mixed_prompt_token_count,
+            "mixed_decode_tokens": self.mixed_decode_token_count,
+            # the open-loop gate quantity: ALL fused decode-capable
+            # dispatches (pure megaticks + mixed megaticks) per decode
+            # token emitted — <= 1/K at steady state even with prefill
+            # permanently in flight (the mixed BENCH_ci gate)
+            "decode_dispatches_per_token": round(
+                (self.decode_dispatch_count + self.mixed_dispatch_count)
+                / max(self.decode_token_count
+                      + self.mixed_decode_token_count, 1), 4),
             "scheduler": self.policy.name,
             "preemptions": self.preempt_count,
             **latency_summary(ttfts, "ttft"),

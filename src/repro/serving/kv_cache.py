@@ -417,15 +417,20 @@ class CachePool:
 
     def reserve(self, slot: int, k: int) -> int:
         """Megatick pre-allocation: make the blocks covering the slot's
-        next ``k`` decode positions writable BEFORE the fused K-step
-        program runs (allocating at chunk boundaries, copy-on-writing
+        next ``k`` write positions writable BEFORE the fused program
+        runs (allocating at chunk boundaries, copy-on-writing
         shared/registered blocks — same mechanics as :meth:`writable`).
-        Returns the slot's megatick step budget: how many of the ``k``
-        steps the pool can back. A short budget freezes the slot
-        mid-megatick (the engine's per-slot ``budgets`` mask), it never
-        corrupts memory — the jitted scan only writes positions the
-        reservation covered. 0 means the slot must stall this megatick
-        (the engine preempts a victim if every slot stalls)."""
+        ``k`` covers EVERY position the megatick will write: pure
+        decode steps, and in a MIXED megatick the prompt-chunk tokens
+        plus the piggybacked decode steps together (one call per slot
+        per dispatch — the engine shrinks the prefill span first when
+        the reservation comes back short). Returns the slot's megatick
+        token budget: how many of the ``k`` positions the pool can
+        back. A short budget freezes the slot mid-megatick (the
+        engine's per-slot budget mask), it never corrupts memory — the
+        jitted scan only writes positions the reservation covered. 0
+        means the slot must stall this megatick (the engine preempts a
+        victim if every slot stalls)."""
         return self.writable(slot, k)
 
     def free(self, slot: int):

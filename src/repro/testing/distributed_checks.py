@@ -772,6 +772,98 @@ def check_engine_megatick_bsp_small():
     _engine_megatick_case("bsp", samplers=("greedy",), window=False)
 
 
+def _engine_mixed_megatick_case(mode, *, samplers=("greedy",
+                                                   "temperature"),
+                                window=True):
+    """Shared body for the MIXED megatick identity checks: K=4 engines
+    under STAGGERED arrivals — prefill in flight for most of the run,
+    so every fused dispatch is the mixed prefill+decode program
+    (``lm.decode_mixed``), never the pure-decode fast path alone — vs
+    the K=1 single-step anchor. Covers mid-megatick prefill->decode
+    transitions, preemption at megatick boundaries, and (optionally)
+    sliding-window reclaim."""
+    from repro.configs import get_config, smoke_config
+    from repro.distributed import context as dctx
+    from repro.distributed.sharding_rules import Rules
+    from repro.models import lm
+    from repro.serving.engine import Engine, Request
+    cfg = smoke_config(get_config("llama3-8b")).replace(
+        n_layers=2, dtype=jnp.float32)
+    mesh = _mesh(1, 4)
+    rng = np.random.default_rng(29)
+    # every request outgrows 2 blocks (prompt + 11 written KV > 16
+    # tokens; the final sampled token's write is deferred), so two
+    # co-resident slots exhaust the 4-block pool and MUST preempt
+    prompts = [[int(t) for t in rng.integers(1, cfg.vocab_size, n)]
+               for n in (9, 6, 12)]
+    wprompt = [int(t) for t in rng.integers(1, cfg.vocab_size, 30)]
+    ctx = dctx.make_context(mesh, fusion_mode=mode, rules=Rules(mesh))
+    with dctx.use(ctx), mesh:
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        for sampler in samplers:
+            streams = {}
+            for K in (1, 4):
+                # staggered arrivals + a pool too small for combined
+                # growth: new prompts keep prefill in flight while
+                # earlier slots decode, and the engines must preempt
+                eng = Engine(params, cfg, batch=2, max_len=64,
+                             prefill_chunk=8, block_size=8, n_blocks=4,
+                             sampler=sampler, seed=7, decode_steps=K)
+                for i, p in enumerate(prompts):
+                    eng.submit(Request(rid=i, prompt=list(p),
+                                       max_new_tokens=12, temp=1.0),
+                               at_tick=2 * i)
+                done = eng.run()
+                assert len(done) == 3, (mode, sampler, K, len(done))
+                assert eng.preempt_count >= 1, (mode, sampler, K)
+                if K > 1:
+                    assert eng.mixed_dispatch_count > 0, (mode, sampler)
+                    assert eng.mixed_prompt_token_count > 0, \
+                        (mode, sampler)
+                streams[K] = {r.rid: r.out_tokens for r in done}
+            assert streams[1] == streams[4], (mode, sampler, streams)
+        if not window:
+            return
+        # sliding-window reclaim holes punched at mixed-megatick
+        # boundaries (the long prompt keeps the slot prefilling across
+        # several megaticks before decode takes over mid-dispatch)
+        cfgw = cfg.replace(sliding_window=16)
+        paramsw = lm.init_params(jax.random.PRNGKey(0), cfgw)
+        wstreams = {}
+        for K in (1, 4):
+            eng = Engine(paramsw, cfgw, batch=2, max_len=64,
+                         prefill_chunk=8, block_size=8, decode_steps=K)
+            eng.submit(Request(rid=0, prompt=list(wprompt),
+                               max_new_tokens=12))
+            done = eng.run()
+            assert eng.pool.blocks_reclaimed >= 3, (mode, K)
+            if K > 1:
+                assert eng.mixed_dispatch_count > 0, mode
+            wstreams[K] = done[0].out_tokens
+        assert wstreams[1] == wstreams[4], (mode, wstreams)
+
+
+def check_engine_mixed_megatick_token_identity():
+    """Mixed-megatick tentpole oracle: ``Engine(decode_steps=4)`` under
+    staggered arrivals — prompt chunks piggybacking on the fused decode
+    scan (``lm.decode_mixed``), first token sampled at the step that
+    consumes the last prompt token — must decode TOKEN-IDENTICAL
+    streams to the single-step engine under bsp and ring, for greedy
+    and the seeded temperature sampler, through preemption and
+    sliding-window reclaim."""
+    for mode in ("bsp", "ring"):
+        _engine_mixed_megatick_case(mode)
+
+
+def check_engine_mixed_megatick_bsp_small():
+    """Per-PR promotable subset of the mixed-megatick identity check:
+    bsp only, greedy only, no window leg — small enough for the fast
+    tier's 8-fake-device subprocess (the nightly battery runs the full
+    mode x sampler x window matrix above)."""
+    _engine_mixed_megatick_case("bsp", samplers=("greedy",),
+                                window=False)
+
+
 # keep LAST so every check_* above is collected (a mid-file listing
 # silently dropped later checks from the battery)
 ALL_CHECKS = [v for k, v in sorted(globals().items())
