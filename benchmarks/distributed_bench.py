@@ -416,6 +416,96 @@ def _bench_ci_mixed(K=4):
     }
 
 
+def _bench_ci_cancel(K=4):
+    """Cancellation leg of the CI gate: an open-loop STAGGERED-ARRIVAL
+    workload where two victims are aborted mid-stream (each after its
+    first emitted token, exactly the serving front-end's hang-up /
+    DELETE path). STRUCTURAL assertions, from the engine's own
+    counters:
+
+    * every SURVIVING stream is token-identical to a reference engine
+      that never saw the victims — cancellation must not perturb
+      co-batched slots (the token-identity invariant, proven by
+      comparing streams, not wall-clock);
+    * the COMBINED decode dispatches-per-token stays <= 1/K with the
+      aborts in flight — cancellation must not degrade the megatick
+      machinery back toward one dispatch per token;
+    * the victims' blocks are actually freed
+      (``blocks_freed_on_abort > 0``) and RE-ALLOCATABLE: a post-cancel
+      admission must run to completion in the same pool.
+
+    Returns the report fragment."""
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm as lm_mod
+    from repro.serving.engine import Engine, Request
+
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=1)
+    params = lm_mod.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    prompts = [list(rng.integers(1, cfg.vocab_size, 6)) for _ in range(6)]
+    victims = {1, 3}
+
+    def make():
+        return Engine(params, cfg, batch=4, max_len=64, prefill_chunk=8,
+                      decode_steps=K, block_size=16, n_blocks=16)
+
+    # reference: the survivors alone, same staggered arrival pattern —
+    # token identity is scheduling-independent, so any schedule drift
+    # from the missing victims must not change a single token
+    ref = make()
+    for i, p in enumerate(prompts):
+        if i in victims:
+            continue
+        ref.submit(Request(rid=i, prompt=[int(t) for t in p],
+                           max_new_tokens=16), at_tick=2 * i)
+    ref_streams = {r.rid: tuple(r.out_tokens) for r in ref.run()}
+
+    eng = make()
+    reqs = []
+    for i, p in enumerate(prompts):
+        r = Request(rid=i, prompt=[int(t) for t in p], max_new_tokens=16)
+        reqs.append(r)
+        eng.submit(r, at_tick=2 * i)
+    done, pending = [], set(victims)
+    while eng.queue or eng.active:
+        done += eng.tick()
+        # abort each victim the first megatick it has streamed a token:
+        # mid-stream, co-batched with live decodes
+        for r in list(eng.active.values()):
+            if r.rid in pending and r.out_tokens:
+                eng.cancel(r.rid)
+                pending.discard(r.rid)
+    freed = eng.blocks_freed_on_abort
+    # freed blocks must be re-allocatable: admit one more request into
+    # the same pool and run it to completion
+    extra = Request(rid=99, prompt=[int(t) for t in prompts[0]],
+                    max_new_tokens=8)
+    eng.submit(extra)
+    done += eng.run()
+    streams = {r.rid: tuple(r.out_tokens) for r in done
+               if r.rid not in victims and r.rid != 99}
+    counts = (eng.decode_dispatch_count + eng.mixed_dispatch_count,
+              eng.decode_token_count + eng.mixed_decode_token_count)
+    dpt = counts[0] / max(counts[1], 1)
+    ok = bool(dpt <= 1.0 / K
+              and streams == ref_streams
+              and eng.cancel_count == len(victims)
+              and freed > 0
+              and len(extra.out_tokens) == 8)
+    return {
+        "cancel_check": "mid-stream aborts: survivors token-identical, "
+                        "combined dispatches-per-token <= 1/K, freed "
+                        "blocks re-allocatable",
+        "cancel_ok": ok,
+        "cancel_count": int(eng.cancel_count),
+        "cancel_blocks_freed": int(freed),
+        "cancel_dispatches_per_token": round(dpt, 4),
+        "cancel_bound": round(1.0 / K, 4),
+        "cancel_survivors_match_reference": bool(streams == ref_streams),
+        "cancel_readmit_tokens": int(len(extra.out_tokens)),
+    }
+
+
 def bench_mixed_megatick():
     """Mixed prefill+decode megaticks under staggered arrivals: the
     open-loop steady state where PR 5's pure megaticks bailed out to
@@ -471,6 +561,12 @@ def bench_ci(out_path="BENCH_ci.json"):
     counters, with prompt tokens actually carried by the fused mixed
     program and streams token-identical to the single-step engine.
 
+    Gate 4 (cancellation): mid-stream aborts under open-loop staggered
+    arrivals — survivors token-identical to a victim-free reference,
+    combined dispatches-per-token <= 1/K with aborts in flight, and
+    the victims' freed blocks re-allocatable by a post-cancel
+    admission.
+
     Writes BENCH_ci.json and exits nonzero on any violation."""
     n = len(jax.devices())
     W = min(4, n)
@@ -509,6 +605,7 @@ def bench_ci(out_path="BENCH_ci.json"):
         "ok": bool(scored_b <= bound),
         **_bench_ci_megatick(),
         **_bench_ci_mixed(),
+        **_bench_ci_cancel(),
         "bounded_per_slot_scored": int(scored_b),
         "masked_per_slot_scored": int(scored_m),
         "bound_max_blocks_x_block_size": int(bound),
@@ -528,7 +625,9 @@ def bench_ci(out_path="BENCH_ci.json"):
           f"megatick_dpt={report['megatick_dispatches_per_token']};"
           f"megatick_ok={report['megatick_ok']};"
           f"mixed_dpt={report['mixed_dispatches_per_token']};"
-          f"mixed_ok={report['mixed_ok']}")
+          f"mixed_ok={report['mixed_ok']};"
+          f"cancel_dpt={report['cancel_dispatches_per_token']};"
+          f"cancel_ok={report['cancel_ok']}")
     if not report["ok"]:
         sys.exit(f"paged-bounded per-slot work {scored_b} exceeds "
                  f"bound {bound}")
@@ -545,6 +644,15 @@ def bench_ci(out_path="BENCH_ci.json"):
             f"{report['mixed_bound']}, prompt_tokens="
             f"{report['mixed_prompt_tokens']}, tokens_match="
             f"{report['mixed_tokens_match_single_step']}")
+    if not report["cancel_ok"]:
+        sys.exit(
+            f"cancellation gate: dispatches-per-token "
+            f"{report['cancel_dispatches_per_token']} vs bound "
+            f"{report['cancel_bound']}, survivors_match="
+            f"{report['cancel_survivors_match_reference']}, "
+            f"cancels={report['cancel_count']}, "
+            f"blocks_freed={report['cancel_blocks_freed']}, "
+            f"readmit_tokens={report['cancel_readmit_tokens']}")
 
 
 def bench_pallas_ag_gemm(W=4):

@@ -1,0 +1,162 @@
+"""Open-loop Poisson load bench for the async serving front-end.
+
+Closed-loop drivers (``examples/serve_decode.py``, the in-process
+bench legs) submit the next request only when an earlier one finishes,
+so the offered load self-throttles to whatever the engine sustains and
+queueing collapse is invisible by construction. This bench is
+OPEN-LOOP: arrivals are a Poisson process (exponential inter-arrival
+times at a configured rate) fired on the wall clock whether or not
+anything has completed — exactly the regime where TTFT tails grow,
+the admission queue fills, and the 429 backpressure edge starts
+shedding.
+
+For each rate in the sweep the bench boots a fresh
+``repro.launch.server.Server`` in-process on an ephemeral port,
+streams every request over real sockets, and reports per-rate:
+
+* p50/p99 TTFT (submit -> first token ON THE WIRE) and p50/p99 TPOT
+  (mean inter-token interval per stream), via
+  ``repro.serving.metrics.percentile`` — wire timestamps, not
+  engine-internal stamps;
+* GOODPUT — completed tokens/s counting only requests that finished
+  ``length`` (shed, timed-out, and cancelled streams contribute 0);
+* offered vs completed request counts and how many were shed (429).
+
+Emits one CSV line per rate (name,us_per_call,derived — the repo's
+bench convention; the "latency" column is p99 TTFT) plus a JSON
+report. Wall-clock on CPU measures structure, not TPU latency — the
+CURVES (tail growth, goodput saturation, shed onset vs rate) are the
+signal, not the absolute numbers.
+
+    PYTHONPATH=src python benchmarks/serve_load.py --rates 2,4,8 \
+        --requests 16 --max-new 16
+"""
+import argparse
+import asyncio
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np                                      # noqa: E402
+
+import jax                                              # noqa: E402
+
+from repro.configs import get_config, smoke_config      # noqa: E402
+from repro.launch.server import Server                  # noqa: E402
+from repro.models import lm                             # noqa: E402
+from repro.serving import client as cl                  # noqa: E402
+from repro.serving.engine import Engine                 # noqa: E402
+from repro.serving.metrics import percentile            # noqa: E402
+
+
+def build_engine(args, cfg, params):
+    return Engine(params, cfg, batch=args.batch, max_len=args.max_len,
+                  prefill_chunk=8, decode_steps=args.decode_steps,
+                  block_size=16, n_blocks=args.kv_blocks)
+
+
+async def run_rate(args, cfg, params, rate: float, rng) -> dict:
+    """One sweep point: fresh server, ``--requests`` Poisson arrivals
+    at ``rate`` req/s, never waiting for completions (open loop)."""
+    srv = Server(build_engine(args, cfg, params), port=0,
+                 max_queue=args.max_queue, timeout_s=args.timeout_s)
+    await srv.start()
+    host, port = srv.host, srv.port
+    try:
+        # warm the dispatch caches so compile time doesn't masquerade
+        # as queueing delay in the first arrivals' TTFT
+        await cl.complete(host, port, [1, 2, 3],
+                          max_new_tokens=args.max_new)
+        tasks = []
+        t0 = time.monotonic()
+        for i in range(args.requests):
+            plen = 3 + int(rng.integers(0, 6))
+            prompt = [int(t) for t in
+                      rng.integers(1, cfg.vocab_size, plen)]
+            tasks.append(asyncio.create_task(cl.complete(
+                host, port, prompt, max_new_tokens=args.max_new)))
+            # open loop: sleep the sampled inter-arrival gap and fire
+            # the next request regardless of what has completed
+            await asyncio.sleep(float(rng.exponential(1.0 / rate)))
+        results = await asyncio.gather(*tasks)
+        elapsed = time.monotonic() - t0
+        metrics = await cl.metrics(host, port)
+    finally:
+        await srv.stop()
+
+    done = [c for c in results if c.ok and c.finish_reason == "length"]
+    shed = sum(1 for c in results if c.status == 429)
+    timed_out = sum(1 for c in results
+                    if c.finish_reason == "timeout")
+    ttfts = [c.ttft_s for c in done if c.ttft_s is not None]
+    tpots = [c.tpot_s for c in done if c.tpot_s is not None]
+    goodput = sum(len(c.token_ids) for c in done) / max(elapsed, 1e-9)
+    return {
+        "rate_req_s": rate,
+        "offered": args.requests,
+        "completed": len(done),
+        "shed_429": shed,
+        "timed_out": timed_out,
+        "elapsed_s": round(elapsed, 3),
+        "goodput_tok_s": round(goodput, 2),
+        "p50_ttft_s": percentile(ttfts, 50),
+        "p99_ttft_s": percentile(ttfts, 99),
+        "p50_tpot_s": percentile(tpots, 50),
+        "p99_tpot_s": percentile(tpots, 99),
+        "engine_dispatches_per_token":
+            metrics.get("decode_dispatches_per_token"),
+    }
+
+
+async def sweep(args) -> list[dict]:
+    cfg = smoke_config(get_config(args.arch)).replace(n_layers=1)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(args.seed)
+    rows = []
+    for rate in args.rates:
+        row = await run_rate(args, cfg, params, rate, rng)
+        rows.append(row)
+        p99 = row["p99_ttft_s"]
+        print(f"serve_load_rate{rate:g},"
+              f"{(p99 or 0) * 1e6:.1f},"
+              f"goodput_tok_s={row['goodput_tok_s']};"
+              f"completed={row['completed']}/{row['offered']};"
+              f"shed_429={row['shed_429']};"
+              f"p50_ttft_s={row['p50_ttft_s']};"
+              f"p99_ttft_s={row['p99_ttft_s']};"
+              f"p50_tpot_s={row['p50_tpot_s']};"
+              f"p99_tpot_s={row['p99_tpot_s']}", flush=True)
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(
+        description="open-loop Poisson load bench over the SSE server")
+    p.add_argument("--arch", default="llama3-8b")
+    p.add_argument("--rates", default="2,4,8",
+                   help="comma-separated arrival rates (req/s) to sweep")
+    p.add_argument("--requests", type=int, default=16,
+                   help="arrivals per sweep point")
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--max-len", type=int, default=64)
+    p.add_argument("--decode-steps", type=int, default=4)
+    p.add_argument("--kv-blocks", type=int, default=None)
+    p.add_argument("--max-queue", type=int, default=8,
+                   help="admission bound: arrivals past it are shed "
+                        "with 429 (the backpressure curve)")
+    p.add_argument("--timeout-s", type=float, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default="SERVE_load.json")
+    args = p.parse_args(argv)
+    args.rates = [float(r) for r in args.rates.split(",") if r]
+    rows = asyncio.run(sweep(args))
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"wrote {args.out} ({len(rows)} sweep points)")
+
+
+if __name__ == "__main__":
+    main()

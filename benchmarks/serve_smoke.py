@@ -1,0 +1,162 @@
+"""serve-smoke: end-to-end cancellation-correctness gate for the async
+serving front-end (the per-PR ``serve-smoke`` CI job).
+
+Boots ``repro.launch.server.Server`` in-process on an ephemeral
+localhost port over a tiny smoke engine and proves, over the actual
+wire protocol, the properties the engine-level gates can only show
+in-process:
+
+1. SOLO BASELINE — the survivor's prompt is decoded once on a fresh
+   engine; its token stream is the byte-identity reference.
+2. CONCURRENT + CANCEL — two SSE streams run co-batched; the victim is
+   DELETE'd after its first streamed chunk. The survivor must finish
+   ``length`` with a stream BYTE-IDENTICAL to the solo run, and the
+   victim must end with ``finish_reason: "cancelled"``.
+3. ABORT ACCOUNTING — ``/v1/metrics`` must report the cancellation and
+   ``blocks_freed_on_abort > 0`` (the victim's KV blocks were actually
+   derefed, not leaked).
+4. RE-ALLOCATABLE — a post-cancel admission must stream to completion
+   in the same pool: the freed blocks are usable, not poisoned.
+5. HANG-UP — a client that closes its socket mid-stream (no DELETE)
+   must be cancelled through the same abort path (polled: the abort
+   lands at the next megatick boundary).
+
+Writes SERVE_smoke.json and exits nonzero on any violation. Stdlib +
+jax only — the CI job installs nothing else.
+
+    PYTHONPATH=src python benchmarks/serve_smoke.py
+"""
+import asyncio
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax                                              # noqa: E402
+
+from repro.configs import get_config, smoke_config      # noqa: E402
+from repro.launch.server import Server                  # noqa: E402
+from repro.models import lm                             # noqa: E402
+from repro.serving import client as cl                  # noqa: E402
+from repro.serving.engine import Engine, Request        # noqa: E402
+
+SURVIVOR = [11, 12, 13, 14]
+VICTIM = [101, 102, 103]
+EXTRA = [7, 8, 9]
+MAX_NEW = 24
+
+
+def build(cfg, params):
+    return Engine(params, cfg, batch=2, max_len=64, prefill_chunk=8,
+                  decode_steps=4, block_size=16, n_blocks=12)
+
+
+async def poll_metrics(host, port, pred, timeout_s=30.0):
+    """Poll /v1/metrics until pred(m) or timeout (aborts land at the
+    next megatick boundary, which may be a slow compile on CPU CI)."""
+    t0 = time.monotonic()
+    while True:
+        m = await cl.metrics(host, port)
+        if pred(m):
+            return m
+        if time.monotonic() - t0 > timeout_s:
+            return m
+        await asyncio.sleep(0.25)
+
+
+async def main() -> int:
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=1)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+
+    # 1. solo baseline: the survivor prompt alone on a fresh engine
+    solo_eng = build(cfg, params)
+    solo_req = Request(rid=0, prompt=list(SURVIVOR),
+                       max_new_tokens=MAX_NEW)
+    solo_eng.submit(solo_req)
+    solo_eng.run()
+    solo = list(solo_req.out_tokens)
+
+    srv = Server(build(cfg, params), port=0)
+    await srv.start()
+    host, port = srv.host, srv.port
+    report = {"solo_tokens": solo}
+    try:
+        # 2. two concurrent streams; DELETE the victim after its first
+        # streamed chunk
+        victim_streamed = asyncio.Event()
+
+        def on_victim_event(ev):
+            choice = (ev.get("choices") or [{}])[0]
+            if (choice.get("delta") or {}).get("token_ids"):
+                victim_streamed.set()
+
+        async def canceller():
+            await victim_streamed.wait()
+            # victim rid: submitted second -> rid 1
+            return await cl.cancel(host, port, 1)
+
+        surv_t = asyncio.create_task(cl.complete(
+            host, port, SURVIVOR, max_new_tokens=MAX_NEW))
+        vict_t = asyncio.create_task(cl.complete(
+            host, port, VICTIM, max_new_tokens=64,
+            on_event=on_victim_event))
+        surv, vict, (cstat, _) = await asyncio.gather(
+            surv_t, vict_t, canceller())
+        report.update({
+            "survivor_tokens": surv.token_ids,
+            "survivor_finish": surv.finish_reason,
+            "victim_finish": vict.finish_reason,
+            "victim_tokens_before_cancel": len(vict.token_ids),
+            "cancel_http_status": cstat,
+        })
+
+        # 3. abort accounting over the wire
+        m = await poll_metrics(host, port,
+                               lambda m: m.get("cancellations", 0) >= 1)
+        report["cancellations"] = m.get("cancellations")
+        report["blocks_freed_on_abort"] = m.get("blocks_freed_on_abort")
+
+        # 4. freed blocks re-allocatable: a fresh admission completes
+        extra = await cl.complete(host, port, EXTRA, max_new_tokens=8)
+        report["readmit_finish"] = extra.finish_reason
+        report["readmit_tokens"] = len(extra.token_ids)
+
+        # 5. hang-up path: close the socket mid-stream, abort must land
+        await cl.complete(host, port, VICTIM, max_new_tokens=64,
+                          hangup_after_tokens=2)
+        m = await poll_metrics(host, port,
+                               lambda m: m.get("cancellations", 0) >= 2)
+        report["cancellations_after_hangup"] = m.get("cancellations")
+    finally:
+        await srv.stop()
+
+    checks = {
+        "survivor_byte_identical_to_solo": surv.token_ids == solo,
+        "survivor_finished_length": surv.finish_reason == "length",
+        "victim_cancelled": vict.finish_reason == "cancelled",
+        "victim_cut_short": len(vict.token_ids) < 64,
+        "cancel_accepted": cstat == 200,
+        "abort_counted": (m.get("cancellations") or 0) >= 1,
+        "blocks_freed": (report["blocks_freed_on_abort"] or 0) > 0,
+        "freed_blocks_reallocatable":
+            extra.finish_reason == "length"
+            and len(extra.token_ids) == 8,
+        "hangup_cancelled": (report["cancellations_after_hangup"]
+                             or 0) >= 2,
+    }
+    report["checks"] = checks
+    report["ok"] = all(checks.values())
+    with open("SERVE_smoke.json", "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"serve_smoke,ok={report['ok']}," + ";".join(
+        f"{k}={v}" for k, v in checks.items()))
+    if not report["ok"]:
+        failed = [k for k, v in checks.items() if not v]
+        print(f"serve_smoke FAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(asyncio.run(main()))

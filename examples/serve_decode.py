@@ -41,6 +41,12 @@ below never degrade the batch back to one dispatch per token; watch
 in the printed metrics. ``--megatick-token-budget`` caps the per-slot
 token quota of a mixed tick (prompt + piggybacked decode; default
 ``max(decode_steps, prefill_chunk)``).
+``--cancel-after N`` aborts request 1 mid-stream once it has generated
+N tokens — the serving front-end's hang-up/DELETE path at engine level
+(``Engine.cancel`` -> ``CachePool.abort``): its blocks go back to the
+pool immediately while its registered prefix chunks stay LRU-resident,
+and the ``cancellations``/``blocks_freed_on_abort`` counters show up
+in the printed metrics.
 """
 import argparse
 import os
@@ -75,6 +81,12 @@ def main():
                    help="per-slot token quota of a mixed megatick "
                         "(prompt + piggybacked decode tokens; default "
                         "max(decode-steps, prefill-chunk))")
+    p.add_argument("--cancel-after", type=int, default=None, metavar="N",
+                   help="abort request 1 mid-stream once it has "
+                        "generated N tokens (Engine.cancel -> "
+                        "CachePool.abort: its blocks are freed for "
+                        "waiting requests, every other stream decodes "
+                        "exactly what a solo run would produce)")
     args = p.parse_args()
 
     cfg = smoke_config(get_config("llama3-8b"))
@@ -110,7 +122,22 @@ def main():
         eng.submit(r, at_tick=2 * i)
 
     t0 = time.time()
-    done = eng.run()
+    if args.cancel_after is None:
+        done = eng.run()
+    else:
+        # drive tick-by-tick so the abort lands mid-stream: request 1
+        # is cancelled once it has streamed N tokens, its blocks return
+        # to the pool, and every surviving stream still decodes exactly
+        # what a solo run would produce
+        victim, done = reqs[1], []
+        while eng.queue or eng.active:
+            done += eng.tick()
+            if (not victim.cancelled and not victim.done
+                    and len(victim.out_tokens) >= args.cancel_after):
+                eng.cancel(victim.rid)
+                print(f"  cancelled req {victim.rid} after "
+                      f"{len(victim.out_tokens)} tokens "
+                      f"(freed {eng.blocks_freed_on_abort} blocks)")
     dt = time.time() - t0
     tot_new = sum(len(r.out_tokens) for r in done)
     m = eng.metrics(done)
@@ -124,6 +151,8 @@ def main():
           f"({m['prefix_hits']} hits, rate {m['prefix_hit_rate']:.0%})")
     print(f"scheduling: {m['preemptions']} preemptions, "
           f"p50/p99 TTFT {m['p50_ttft_s']}/{m['p99_ttft_s']}s")
+    print(f"cancellation: {m['cancellations']} mid-stream aborts, "
+          f"{m['blocks_freed_on_abort']} blocks freed on abort")
     print(f"megaticks: decode_steps={m['decode_steps']} -> "
           f"{m['decode_tokens']} decode tokens over "
           f"{m['decode_dispatches']} pure-decode dispatches "

@@ -48,6 +48,11 @@ HOT_FUNCTIONS = {
     "models/lm.py": frozenset(
         {"decode_step", "decode_chunk", "decode_multi",
          "decode_mixed"}),
+    # the async serving front-end's drive loop sits between every
+    # megatick: a host sync here stalls ALL in-flight streams at once
+    "launch/server.py": frozenset(
+        {"_drive", "_drive_once_host", "_apply_intake",
+         "_apply_cancels", "_apply_timeouts", "_flush"}),
 }
 
 
@@ -311,6 +316,15 @@ DISPATCH_BUDGETS = {
         "_megatick": (1, 1),
         "_megatick_mixed": (1, 1),
         "_tick": (2, 1),
+    },
+    # launch/server.py (async serving front-end): the host-side half of
+    # a drive iteration — intake, cancellations, timeouts, snapshots —
+    # runs BETWEEN engine ticks and must add ZERO dispatches and ZERO
+    # readbacks on top of the engine's own budget, or the wire-visible
+    # 1/K bound silently gains a per-megatick tax the bench gates
+    # attribute to the wrong layer.
+    "launch/server.py": {
+        "_drive_once_host": (0, 0),
     },
 }
 

@@ -140,6 +140,19 @@ therefore survive rescheduling. The engine still raises when preemption
 cannot make progress (a single request's history has outgrown the whole
 pool).
 
+CANCELLATION (``Engine.cancel(rid)``) is the abort half of the serving
+story: a request whose USER went away (hang-up, timeout) leaves
+mid-stream instead of decoding to completion. Queued requests just
+leave the queue; active ones take ``CachePool.abort`` — their written
+prompt chunks register as prefix blocks (still LRU-resident for future
+identical prompts), every block reference drops, and the freed blocks
+are immediately re-allocatable. Cancellation is applied BETWEEN
+dispatches (the async front-end, ``repro.launch.server``, applies it
+at megatick boundaries), so surviving co-batched streams are never
+perturbed — token-identical to solo runs, with the combined 1/K
+dispatch bound still holding (BENCH_ci gate 4 asserts both with aborts
+in flight).
+
 Per-request metrics: TTFT (submit -> first generated token) and TPOT
 (mean inter-token time over the generated tokens); engine metrics add
 p50/p99 latency tails, preemption/reclaim counters, and block
@@ -179,6 +192,7 @@ class Request:
     preemptions: int = 0             # times evicted and re-queued
     seq: int = 0                     # submission order (engine-stamped)
     done: bool = False
+    cancelled: bool = False          # aborted mid-stream (Engine.cancel)
     submitted_t: float = 0.0
     admitted_t: float = 0.0
     first_token_t: float = 0.0
@@ -305,6 +319,8 @@ class Engine:
         self.tick_count = 0
         self.dispatch_count = 0     # ticks that actually ran a jitted step
         self.preempt_count = 0      # victims evicted on pool exhaustion
+        self.cancel_count = 0       # requests aborted via Engine.cancel
+        self.blocks_freed_on_abort = 0   # blocks aborts made re-allocatable
         # decode-phase structural counters (the megatick win): dispatches
         # where every participating slot was decoding, and the tokens
         # those dispatches produced — dispatches-per-token is their ratio
@@ -474,6 +490,50 @@ class Engine:
         # queue head: the victim is in-flight work — every policy gets
         # first say on it again next tick via select_admissions
         self.queue.appendleft(victim)
+
+    def cancel(self, rid: int) -> bool:
+        """Abort request ``rid`` mid-stream: the user hung up, a server
+        timeout fired, or an operator killed the stream. Returns True
+        when the request was found (queued or active), False otherwise
+        (already finished, already cancelled, or never submitted).
+
+        A QUEUED request simply leaves the queue. An ACTIVE one takes
+        the ``CachePool.abort`` path: its fully-written chunks register
+        as prefix blocks (a later identical prompt is still a prefix
+        hit), every block reference drops — private blocks return to
+        the free list, registered ones stay LRU-resident as eviction
+        supply — and the device-side slot resets, so the freed blocks
+        are re-allocatable by the very next admission.
+
+        Call BETWEEN ticks (the serving front-end's drive loop applies
+        cancellations at megatick boundaries): an in-flight megatick
+        always completes, and because every surviving stream's tokens
+        depend only on its own history and its (seed, rid, token-index)
+        sampler keys, cancelling a co-batched slot never perturbs the
+        survivors — they stay token-identical to solo runs (the
+        serve-smoke CI gate asserts this end to end)."""
+        for req in self.queue:
+            if req.rid == rid and not req.done:
+                self.queue.remove(req)
+                req.done = True
+                req.cancelled = True
+                self.cancel_count += 1
+                return True
+        for slot, req in list(self.active.items()):
+            if req.rid != rid:
+                continue
+            # register what was actually written: the consumed prompt
+            # prefix plus the generated history (same fold preemption
+            # uses), so the abort leaves a warm prefix cache behind
+            history = list(req.eff_prompt) + list(req.out_tokens)
+            self.blocks_freed_on_abort += self.pool.abort(slot, history)
+            del self.active[slot]
+            req.slot = -1
+            req.done = True
+            req.cancelled = True
+            self.cancel_count += 1
+            return True
+        return False
 
     def _retire(self, slot: int, req: Request, now: float, finished):
         """Retire a finished request: shared by the single-step and
@@ -876,6 +936,12 @@ class Engine:
                       + self.mixed_decode_token_count, 1), 4),
             "scheduler": self.policy.name,
             "preemptions": self.preempt_count,
+            # cancellation/abort counters: requests aborted mid-stream
+            # (Engine.cancel — user hang-ups, server timeouts) and the
+            # KV blocks those aborts made re-allocatable for subsequent
+            # admissions (the serve-smoke CI gate quantity)
+            "cancellations": self.cancel_count,
+            "blocks_freed_on_abort": self.blocks_freed_on_abort,
             **latency_summary(ttfts, "ttft"),
             **latency_summary(tpots, "tpot"),
             **self.pool.metrics(),

@@ -175,6 +175,7 @@ class CachePool:
         self.admitted = 0
         self.blocks_hwm = 0
         self.preempted_slots = 0
+        self.aborted_slots = 0         # mid-stream cancellations (abort())
         self.blocks_reclaimed = 0      # sliding-window dead-block frees
 
     # ----------------------------------------------------------- block layer
@@ -452,6 +453,19 @@ class CachePool:
         self.lengths[slot] = 0
         self._dirty = True
 
+    def _release_slot(self, slot: int, tokens=None):
+        """Shared eviction mechanics for :meth:`preempt` and
+        :meth:`abort`: register the slot's fully-written chunks as
+        prefix blocks BEFORE the references drop (so they land in the
+        resident LRU instead of vanishing), free every block reference,
+        and clear the device-side position (``lm.release_slot_paged``)
+        so the jitted state never carries a stale length into the
+        slot's inactive period."""
+        if tokens is not None:
+            self.register_prompt_chunks(slot, tokens)
+        self.free(slot)
+        self.state = lm.release_slot_paged(self.state, slot)
+
     def preempt(self, slot: int, tokens=None):
         """Evict the slot so its blocks can back other requests.
 
@@ -461,15 +475,26 @@ class CachePool:
         resident LRU instead of vanishing: the resumed request gets a
         prefix hit and re-prefills only the final partial block and the
         last token. (Under pool pressure the resident blocks are
-        ordinary eviction supply — preemption never pins memory.) The
-        device-side position is cleared immediately
-        (``lm.release_slot_paged``) so the jitted state never carries a
-        stale length into the slot's inactive period."""
-        if tokens is not None:
-            self.register_prompt_chunks(slot, tokens)
-        self.free(slot)
-        self.state = lm.release_slot_paged(self.state, slot)
+        ordinary eviction supply — preemption never pins memory.)"""
+        self._release_slot(slot, tokens)
         self.preempted_slots += 1
+
+    def abort(self, slot: int, tokens=None) -> int:
+        """Cancellation: drop the slot mid-stream because the REQUEST
+        went away (the user hung up, a timeout fired), not because the
+        pool needs the memory. Same block mechanics as :meth:`preempt`
+        — every reference is dropped, private blocks return to the
+        free list immediately — but the registered prefix chunks of
+        ``tokens`` (the victim's prompt + generated history) stay
+        LRU-RESIDENT: a later identical prompt is still a prefix hit
+        even though this stream never resumes. Returns the number of
+        blocks the abort made re-allocatable (the ``blocks_in_use``
+        delta — LRU-resident registered chunks count, they are
+        ordinary eviction supply for the next admission)."""
+        before = self.blocks_in_use
+        self._release_slot(slot, tokens)
+        self.aborted_slots += 1
+        return before - self.blocks_in_use
 
     def reclaim_out_of_window(self, slot: int, window: int) -> int:
         """Free the slot's blocks that have rolled out of the attention
@@ -538,4 +563,5 @@ class CachePool:
             "cow_copies": self.cow_copies,
             "block_evictions": self.evictions,
             "kv_blocks_reclaimed": self.blocks_reclaimed,
+            "kv_slots_aborted": self.aborted_slots,
         }

@@ -1,0 +1,314 @@
+"""Async serving front-end: submit/stream/cancel/timeout/backpressure
+over the wire, and the engine-level abort path under co-batching.
+
+Server tests boot ``repro.launch.server.Server`` in-process on an
+ephemeral localhost port and drive it through
+``repro.serving.client`` — real sockets, the same stdlib-only path
+the serve-smoke CI tier uses. Engine tests exercise ``Engine.cancel``
+-> ``CachePool.abort`` directly: a mid-megatick abort must free the
+victim's blocks without perturbing a single token of the co-batched
+survivor (the token-identity invariant, checked against a solo run).
+"""
+import asyncio
+import functools
+
+import jax
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.launch.server import Server
+from repro.models import lm
+from repro.serving import client as cl
+from repro.serving.engine import Engine, Request
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=1)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(batch=2, **kw):
+    cfg, params = _setup()
+    kw.setdefault("decode_steps", 4)
+    kw.setdefault("block_size", 16)
+    kw.setdefault("n_blocks", 12)
+    return Engine(params, cfg, batch=batch, max_len=64, prefill_chunk=8,
+                  **kw)
+
+
+def _solo(prompt, n_new):
+    eng = _engine(batch=1)
+    req = Request(rid=0, prompt=list(prompt), max_new_tokens=n_new)
+    eng.submit(req)
+    eng.run()
+    return list(req.out_tokens)
+
+
+async def _poll(host, port, pred, timeout_s=30.0):
+    for _ in range(int(timeout_s / 0.1)):
+        m = await cl.metrics(host, port)
+        if pred(m):
+            return m
+        await asyncio.sleep(0.1)
+    return await cl.metrics(host, port)
+
+
+# ------------------------------------------------------ engine-level abort
+def test_engine_cancel_mid_megatick_preserves_cobatched():
+    """Abort one of two co-batched streams mid-decode: the victim's
+    blocks are freed, the survivor's tokens are byte-identical to a
+    solo run (cancellation must not corrupt co-batched slots)."""
+    eng = _engine()
+    surv = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=10)
+    vict = Request(rid=1, prompt=[5, 6, 7], max_new_tokens=32)
+    eng.submit(surv)
+    eng.submit(vict)
+    while eng.queue or eng.active:
+        eng.tick()
+        if not vict.cancelled and vict.out_tokens:
+            assert eng.cancel(1)
+    assert vict.cancelled and vict.done and vict.slot == -1
+    assert len(vict.out_tokens) < 32
+    assert eng.cancel_count == 1
+    assert eng.blocks_freed_on_abort > 0
+    assert surv.out_tokens == _solo([1, 2, 3], 10)
+    m = eng.metrics([surv])
+    assert m["cancellations"] == 1
+    assert m["blocks_freed_on_abort"] == eng.blocks_freed_on_abort
+    assert m["kv_slots_aborted"] == 1
+
+
+def test_engine_cancel_queued_and_unknown():
+    """Cancelling a still-queued request removes it without touching
+    the pool; unknown/finished rids return False."""
+    eng = _engine(batch=1)
+    a = Request(rid=0, prompt=[1, 2], max_new_tokens=4)
+    b = Request(rid=1, prompt=[3, 4], max_new_tokens=4)
+    eng.submit(a)
+    eng.submit(b)
+    done = eng.tick()               # admits a into the only slot (and
+                                    # may even finish it: one fused
+                                    # mixed tick covers prefill + 4
+                                    # piggybacked decode steps)
+    assert any(r.rid == 1 for r in eng.queue)
+    freed_before = eng.blocks_freed_on_abort
+    assert eng.cancel(1)            # queued: no blocks to free
+    assert b.cancelled and b.done
+    assert eng.blocks_freed_on_abort == freed_before
+    assert not eng.cancel(42)       # never submitted
+    assert not eng.cancel(1)        # already cancelled
+    done += eng.run()
+    assert [r.rid for r in done] == [0]
+    assert a.out_tokens == _solo([1, 2], 4)
+
+
+def test_engine_cancelled_blocks_reallocatable():
+    """After an abort the freed blocks serve a fresh admission in the
+    same (small) pool."""
+    eng = _engine()
+    vict = Request(rid=0, prompt=[9, 8, 7], max_new_tokens=32)
+    eng.submit(vict)
+    while not vict.out_tokens:
+        eng.tick()
+    assert eng.cancel(0)
+    extra = Request(rid=1, prompt=[4, 5, 6], max_new_tokens=6)
+    eng.submit(extra)
+    eng.run()
+    assert extra.out_tokens == _solo([4, 5, 6], 6)
+
+
+# ------------------------------------------------------- wire-level server
+def test_server_stream_identity_and_chunking():
+    """Two concurrent SSE streams decode exactly what solo engine runs
+    produce, and tokens arrive chunked at megatick boundaries (one
+    event per tick, not per token)."""
+    async def run():
+        srv = Server(_engine(), port=0)
+        await srv.start()
+        try:
+            a, b = await asyncio.gather(
+                cl.complete(srv.host, srv.port, [1, 2, 3],
+                            max_new_tokens=8),
+                cl.complete(srv.host, srv.port, [7, 8, 9, 10],
+                            max_new_tokens=8))
+        finally:
+            await srv.stop()
+        return a, b
+
+    a, b = asyncio.run(run())
+    assert a.finish_reason == "length" and b.finish_reason == "length"
+    assert a.token_ids == _solo([1, 2, 3], 8)
+    assert b.token_ids == _solo([7, 8, 9, 10], 8)
+    for c in (a, b):
+        token_events = [e for e in c.events
+                        if (e.get("choices") or [{}])[0]
+                        .get("delta", {}).get("token_ids")]
+        # megatick-boundary flush: at most 1 prefill event + ceil(7/K)
+        # megatick events for 8 tokens at K=4 — never 8 per-token events
+        assert 1 <= len(token_events) <= 3, c.events
+
+
+def test_server_cancel_frees_blocks_and_survivor_unharmed():
+    """DELETE mid-stream: victim ends ``cancelled`` with its blocks
+    freed (visible in /v1/metrics), survivor stays byte-identical, and
+    a post-cancel admission completes (blocks re-allocatable)."""
+    async def run():
+        srv = Server(_engine(), port=0)
+        await srv.start()
+        host, port = srv.host, srv.port
+        try:
+            streamed = asyncio.Event()
+
+            def on_ev(ev):
+                ch = (ev.get("choices") or [{}])[0]
+                if (ch.get("delta") or {}).get("token_ids"):
+                    streamed.set()
+
+            async def canceller():
+                await streamed.wait()
+                return await cl.cancel(host, port, 1)
+
+            surv, vict, (cstat, _) = await asyncio.gather(
+                cl.complete(host, port, [1, 2, 3], max_new_tokens=8),
+                cl.complete(host, port, [7, 8, 9], max_new_tokens=48,
+                            on_event=on_ev),
+                canceller())
+            m = await _poll(host, port,
+                            lambda m: m.get("cancellations", 0) >= 1)
+            extra = await cl.complete(host, port, [4, 5, 6],
+                                      max_new_tokens=6)
+        finally:
+            await srv.stop()
+        return surv, vict, cstat, m, extra
+
+    surv, vict, cstat, m, extra = asyncio.run(run())
+    assert cstat == 200
+    assert vict.finish_reason == "cancelled"
+    assert len(vict.token_ids) < 48
+    assert surv.finish_reason == "length"
+    assert surv.token_ids == _solo([1, 2, 3], 8)
+    assert m["cancellations"] == 1
+    assert m["blocks_freed_on_abort"] > 0
+    assert extra.finish_reason == "length"
+    assert extra.token_ids == _solo([4, 5, 6], 6)
+
+
+def test_server_timeout_cancels_through_abort_path():
+    """timeout_s=0 expires immediately: the stream ends with
+    ``finish_reason: "timeout"`` via the same abort path."""
+    async def run():
+        srv = Server(_engine(), port=0)
+        await srv.start()
+        try:
+            c = await cl.complete(srv.host, srv.port, [1, 2, 3],
+                                  max_new_tokens=32, timeout_s=0.0)
+        finally:
+            await srv.stop()
+        return c
+
+    c = asyncio.run(run())
+    assert c.finish_reason == "timeout"
+
+
+def test_server_backpressure_429_on_full_queue():
+    """max_queue=1 with the single slot busy: once one request waits in
+    the engine queue, the next admission is refused with 429 — and the
+    shed request never perturbs the ones already running."""
+    async def run():
+        srv = Server(_engine(batch=1), port=0, max_queue=1)
+        await srv.start()
+        host, port = srv.host, srv.port
+
+        async def wait_health(pred):
+            for _ in range(600):
+                _, h = await cl.request_json(host, port, "GET",
+                                             "/healthz")
+                if pred(h):
+                    return h
+                await asyncio.sleep(0.01)
+            return h
+
+        try:
+            t_a = asyncio.create_task(cl.complete(
+                host, port, [1, 2, 3], max_new_tokens=60))
+            # a drains from intake into the single slot: running
+            # requests don't count against the admission bound
+            await wait_health(lambda h: h["inflight"] == 1
+                              and h["queued"] == 0)
+            t_b = asyncio.create_task(cl.complete(
+                host, port, [7, 8, 9], max_new_tokens=60))
+            # b sits in the engine queue (slot busy) -> bound reached
+            await wait_health(lambda h: h["queued"] >= 1)
+            shed = await cl.complete(host, port, [4, 5],
+                                     max_new_tokens=4)
+            await cl.cancel(host, port, 0)
+            await cl.cancel(host, port, 1)
+            a, b = await asyncio.gather(t_a, t_b)
+        finally:
+            await srv.stop()
+        return shed, a, b
+
+    shed, a, b = asyncio.run(run())
+    assert shed.status == 429
+    assert "queue full" in (shed.error or "")
+    assert a.finish_reason == "cancelled"
+    assert b.finish_reason == "cancelled"
+
+
+def test_server_rejects_bad_requests_as_4xx():
+    """The engine's loud ValueErrors surface as 4xx at the API edge,
+    never as a broken stream or a crashed drive loop."""
+    async def run():
+        srv = Server(_engine(), port=0)
+        await srv.start()
+        host, port = srv.host, srv.port
+        try:
+            empty = await cl.complete(host, port, [],
+                                      max_new_tokens=4)
+            s1, b1 = await cl.request_json(
+                host, port, "POST", "/v1/completions",
+                {"prompt": "not a list"})
+            s2, b2 = await cl.request_json(
+                host, port, "POST", "/v1/completions",
+                {"prompt": [1, 2], "max_new_tokens": 0})
+            toolong = await cl.complete(host, port, list(range(1, 70)),
+                                        max_new_tokens=4)
+            s3, _ = await cl.request_json(host, port, "GET", "/nope")
+            s4, _ = await cl.request_json(host, port, "DELETE",
+                                          "/v1/completions/777")
+            # after all the refusals a normal request still works
+            okc = await cl.complete(host, port, [1, 2, 3],
+                                    max_new_tokens=4)
+        finally:
+            await srv.stop()
+        return empty, s1, b1, s2, b2, toolong, s3, s4, okc
+
+    empty, s1, b1, s2, b2, toolong, s3, s4, okc = asyncio.run(run())
+    assert empty.status == 400 and "prompt" in empty.error
+    assert s1 == 400 and "prompt" in b1["error"]
+    assert s2 == 400 and "max_new_tokens" in b2["error"]
+    assert toolong.status == 400 and "max_len" in toolong.error
+    assert s3 == 404
+    assert s4 == 404                # cancel of unknown rid
+    assert okc.finish_reason == "length"
+    assert okc.token_ids == _solo([1, 2, 3], 4)
+
+
+def test_server_nonstreaming_json_response():
+    """stream=false returns one JSON body with the full completion,
+    identical to the streamed tokens."""
+    async def run():
+        srv = Server(_engine(), port=0)
+        await srv.start()
+        try:
+            c = await cl.complete(srv.host, srv.port, [2, 4, 6],
+                                  max_new_tokens=6, stream=False)
+        finally:
+            await srv.stop()
+        return c
+
+    c = asyncio.run(run())
+    assert c.ok and c.finish_reason == "length"
+    assert c.token_ids == _solo([2, 4, 6], 6)
