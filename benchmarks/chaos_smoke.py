@@ -1,0 +1,185 @@
+"""chaos-smoke: end-to-end fault-injection gate for the async serving
+front-end (the per-PR ``chaos-smoke`` CI job, docs/robustness.md).
+
+Boots ``repro.launch.server.Server`` in-process on an ephemeral
+localhost port with a DETERMINISTIC :class:`repro.serving.faults`
+FaultPlan armed, and proves over the actual wire protocol that every
+fault stays contained to its victim:
+
+1. REFERENCE — both prompts decoded on a fresh fault-free engine; the
+   token streams are the byte-identity references.
+2. CONTAINED CHAOS — two SSE streams run co-batched while the plan
+   fires a transient dispatch failure (absorbed by bounded retry), a
+   pool-exhaustion spike (absorbed by the allocation guard), and a
+   poisoned slot (victim retires ``finish_reason="error"`` as an SSE
+   error event). The survivor must finish ``length`` BYTE-IDENTICAL
+   to the reference, and the drive loop must survive.
+3. BUDGETED RETRY — ``/v1/metrics`` must count the injected faults and
+   the absorbed retry, and the combined dispatches-per-token WITH the
+   retry in the numerator must hold the 1/K megatick bound (the same
+   quantity BENCH_ci gate 5 asserts in-process).
+4. SOCKET DROP + CLIENT RETRY — the plan severs a live SSE socket
+   mid-stream; ``repro.serving.client`` retries with seeded
+   full-jitter backoff and — because the dropped request's KV stays
+   prefix-registered — recovers the FULL byte-identical stream.
+5. HEALTHY AFTER — a post-chaos admission streams to completion and
+   ``/readyz`` still answers 200: chaos consumed no capacity.
+
+Writes CHAOS_smoke.json and exits nonzero on any violation. Stdlib +
+jax only — the CI job installs nothing else.
+
+    PYTHONPATH=src python benchmarks/chaos_smoke.py
+"""
+import asyncio
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+import jax                                              # noqa: E402
+
+from repro.configs import get_config, smoke_config      # noqa: E402
+from repro.launch.server import Server                  # noqa: E402
+from repro.models import lm                             # noqa: E402
+from repro.serving import client as cl                  # noqa: E402
+from repro.serving.engine import Engine, Request        # noqa: E402
+from repro.serving.faults import FaultPlan, FaultSpec   # noqa: E402
+
+# victim prompt >= block_size so the socket-drop retry can land a
+# prefix hit; three survivors so the batch amortizes megatick
+# dispatches well past the 1/K bound even with the victim retired
+VICTIM = [11, 12, 13, 14, 15, 16, 17, 18, 19, 20,
+          21, 22, 23, 24, 25, 26, 27, 28]
+SURVIVORS = ([31, 32, 33, 34, 35, 36, 37, 38, 39, 40,
+              41, 42, 43, 44, 45, 46],
+             [51, 52, 53, 54, 55, 56, 57, 58, 59, 60, 61, 62],
+             [71, 72, 73, 74, 75, 76, 77, 78, 79, 80])
+MAX_NEW = 24
+K = 4
+
+
+def build(cfg, params, fault_plan=None):
+    return Engine(params, cfg, batch=4, max_len=64, prefill_chunk=8,
+                  decode_steps=K, block_size=8, n_blocks=32,
+                  fault_plan=fault_plan)
+
+
+def chaos_plan() -> FaultPlan:
+    """The seeded plan: one transient dispatch failure, one pool
+    spike, one poisoned slot. The poison pokes ticks 3-5 (slot 0 only
+    retires once; later pokes on a freed slot are no-ops) so
+    wire-arrival jitter cannot slide the victim past the window — and
+    the survivors' 24-token decode runs well past tick 5, so every
+    poke is consumed before the post-chaos admission."""
+    return FaultPlan([FaultSpec("dispatch", tick=1, count=1),
+                      FaultSpec("pool", tick=2, blocks=8, hold_ticks=2),
+                      FaultSpec("tokens", tick=3, slot=0),
+                      FaultSpec("tokens", tick=4, slot=0),
+                      FaultSpec("tokens", tick=5, slot=0)])
+
+
+async def main() -> int:
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=1)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+
+    # 1. fault-free reference (greedy sampling: rid-independent)
+    ref_eng = build(cfg, params)
+    refs = [Request(rid=i, prompt=list(p), max_new_tokens=MAX_NEW)
+            for i, p in enumerate((VICTIM, *SURVIVORS))]
+    for r in refs:
+        ref_eng.submit(r)
+    ref_eng.run()
+    ref_victim = list(refs[0].out_tokens)
+    ref_survivors = [list(r.out_tokens) for r in refs[1:]]
+
+    report = {"reference_victim": ref_victim,
+              "reference_survivors": ref_survivors}
+
+    # 2+3. contained chaos: poison + transient dispatch + pool spike
+    srv = Server(build(cfg, params, fault_plan=chaos_plan()), port=0)
+    await srv.start()
+    try:
+        vict, *survs = await asyncio.gather(
+            cl.complete(srv.host, srv.port, VICTIM,
+                        max_new_tokens=MAX_NEW),
+            *(cl.complete(srv.host, srv.port, p,
+                          max_new_tokens=MAX_NEW)
+              for p in SURVIVORS))
+        m = await cl.metrics(srv.host, srv.port)
+        # combined dispatches-per-token with absorbed retries in the
+        # numerator — BENCH_ci gate 5's quantity, over the wire
+        dispatches = (m["decode_dispatches"] + m["mixed_dispatches"]
+                      + m["dispatch_retries"])
+        tokens = m["decode_tokens"] + m["mixed_decode_tokens"]
+        dpt = dispatches / max(tokens, 1)
+        extra = await cl.complete(srv.host, srv.port, [7, 8, 9],
+                                  max_new_tokens=8)
+        rstat, rbody = await cl.request_json(srv.host, srv.port,
+                                             "GET", "/readyz")
+    finally:
+        await srv.stop()
+    report.update({
+        "victim_finish": vict.finish_reason, "victim_error": vict.error,
+        "survivor_tokens": [s.token_ids for s in survs],
+        "survivor_finish": [s.finish_reason for s in survs],
+        "faults_injected": m.get("faults_injected"),
+        "dispatch_retries": m.get("dispatch_retries"),
+        "errors": m.get("errors"),
+        "dispatches_per_token": round(dpt, 4), "bound": 1.0 / K,
+        "readmit_finish": extra.finish_reason,
+        "readyz_status": rstat, "readyz_body": rbody,
+    })
+
+    # 4. socket drop severed mid-stream, recovered by client retry
+    srv = Server(build(cfg, params,
+                       fault_plan=FaultPlan([FaultSpec("socket",
+                                                       tick=2)])),
+                 port=0)
+    await srv.start()
+    try:
+        redo = await cl.complete(srv.host, srv.port, VICTIM,
+                                 max_new_tokens=MAX_NEW, retries=2,
+                                 retry_seed=7)
+        m2 = await cl.metrics(srv.host, srv.port)
+    finally:
+        await srv.stop()
+    report.update({
+        "drop_recovered_tokens": redo.token_ids,
+        "drop_recovered_finish": redo.finish_reason,
+        "drop_client_retries": redo.retries,
+        "drop_faults_injected": m2.get("faults_injected"),
+    })
+
+    checks = {
+        "victim_retired_error": vict.finish_reason is None
+        and vict.error is not None,
+        "survivors_byte_identical":
+            [s.token_ids for s in survs] == ref_survivors,
+        "survivors_finished_length":
+            all(s.finish_reason == "length" for s in survs),
+        "all_faults_injected": (m.get("faults_injected") or 0) >= 5,
+        "retry_absorbed": (m.get("dispatch_retries") or 0) >= 1,
+        "one_error_only": m.get("errors") == 1,
+        "dispatch_budget_held": dpt <= 1.0 / K + 1e-9,
+        "healthy_after_chaos": extra.finish_reason == "length"
+        and rstat == 200,
+        "drop_recovered_byte_identical":
+            redo.token_ids == ref_victim
+            and redo.finish_reason == "length",
+        "drop_took_client_retry": redo.retries >= 1,
+    }
+    report["checks"] = checks
+    report["ok"] = all(checks.values())
+    with open("CHAOS_smoke.json", "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"chaos_smoke,ok={report['ok']}," + ";".join(
+        f"{k}={v}" for k, v in checks.items()))
+    if not report["ok"]:
+        failed = [k for k, v in checks.items() if not v]
+        print(f"chaos_smoke FAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(asyncio.run(main()))

@@ -506,6 +506,117 @@ def _bench_ci_cancel(K=4):
     }
 
 
+def _bench_ci_chaos(K=4):
+    """Chaos leg of the CI gate (gate 5, PR 10): the seeded fault plan
+    from docs/robustness.md — one poisoned slot, one transient
+    dispatch failure, one pool-exhaustion spike — against a staggered
+    open-loop workload, then a mid-flight drain->snapshot->restore
+    into a FRESH engine. STRUCTURAL assertions:
+
+    * every SURVIVING stream (everything but the poisoned victim) is
+      token-identical to a fault-free reference run — recovery must be
+      invisible to co-batched requests;
+    * the COMBINED dispatches-per-decode-token, counting every retry
+      dispatch and both engines (pre-drain + restored), stays <= 1/K —
+      fault handling must not degrade the megatick machinery;
+    * the restore resumes EVERY request unfinished at the snapshot,
+      and each one that had streamed tokens resumes as a PREFIX HIT
+      (its already-computed KV is served, not recomputed).
+
+    Returns the report fragment."""
+    import tempfile
+
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm as lm_mod
+    from repro.serving.engine import Engine, Request
+    from repro.serving.faults import FaultPlan, FaultSpec
+
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=1)
+    params = lm_mod.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(13)
+    prompts = [list(rng.integers(1, cfg.vocab_size, 6)) for _ in range(4)]
+    victim_rid = 1                 # FCFS: rid 1 lands in slot 1
+
+    def make(plan=None):
+        return Engine(params, cfg, batch=4, max_len=64, prefill_chunk=8,
+                      decode_steps=K, block_size=8, n_blocks=24,
+                      fault_plan=plan)
+
+    def submit_all(eng):
+        reqs = [Request(rid=i, prompt=[int(t) for t in p],
+                        max_new_tokens=16)
+                for i, p in enumerate(prompts)]
+        for i, r in enumerate(reqs):
+            eng.submit(r, at_tick=2 * i)
+        return reqs
+
+    # fault-free reference streams
+    ref = make()
+    submit_all(ref)
+    ref_streams = {r.rid: tuple(r.out_tokens) for r in ref.run()}
+
+    # the seeded plan: transient dispatch failure at tick 3, poisoned
+    # logits on the victim's slot at tick 4, pool spike over ticks 5-6
+    plan = FaultPlan([
+        FaultSpec("dispatch", tick=3, count=1),
+        FaultSpec("tokens", tick=4, slot=1),
+        FaultSpec("pool", tick=5, blocks=4, hold_ticks=2),
+    ])
+    eng = make(plan)
+    reqs = submit_all(eng)
+    done = []
+    for _ in range(6):             # all three faults fire in here
+        done += eng.tick()
+    streamed_at_snap = {r.rid for r in reqs
+                        if r.out_tokens and not r.done}
+    unfinished = {r.rid for r in reqs if not r.done}
+    with tempfile.TemporaryDirectory() as tmp:
+        step = eng.snapshot(Checkpointer(tmp))
+        fresh = make()
+        restored = fresh.restore(Checkpointer(tmp), step)
+        done += fresh.run()
+    by_rid = {r.rid: r for r in done}
+    survivors = {r.rid: tuple(r.out_tokens) for r in done
+                 if r.rid != victim_rid}
+    expect = {rid: s for rid, s in ref_streams.items()
+              if rid != victim_rid}
+    victim = next(r for r in reqs if r.rid == victim_rid)
+    dispatches = (eng.decode_dispatch_count + eng.mixed_dispatch_count
+                  + eng.dispatch_retry_count
+                  + fresh.decode_dispatch_count
+                  + fresh.mixed_dispatch_count
+                  + fresh.dispatch_retry_count)
+    tokens = (eng.decode_token_count + eng.mixed_decode_token_count
+              + fresh.decode_token_count + fresh.mixed_decode_token_count)
+    dpt = dispatches / max(tokens, 1)
+    resumed = {r.rid for r in restored}
+    prefix_ok = all(by_rid[rid].reused_tokens > 0
+                    for rid in streamed_at_snap)
+    ok = bool(dpt <= 1.0 / K
+              and survivors == expect
+              and victim.finish_reason == "error"
+              and resumed == unfinished
+              and all(by_rid[rid].done for rid in resumed)
+              and prefix_ok
+              and plan.injected == 3)
+    return {
+        "chaos_check": "seeded faults (poison+dispatch+pool spike) + "
+                       "drain/restore: survivors token-identical, "
+                       "combined dispatches-per-token <= 1/K, resumed "
+                       "requests are prefix hits",
+        "chaos_ok": ok,
+        "chaos_faults_injected": int(plan.injected),
+        "chaos_dispatch_retries": int(eng.dispatch_retry_count),
+        "chaos_victim_finish_reason": victim.finish_reason,
+        "chaos_dispatches_per_token": round(dpt, 4),
+        "chaos_bound": round(1.0 / K, 4),
+        "chaos_survivors_match_reference": bool(survivors == expect),
+        "chaos_resumed": sorted(resumed),
+        "chaos_resume_prefix_hits": bool(prefix_ok),
+    }
+
+
 def bench_mixed_megatick():
     """Mixed prefill+decode megaticks under staggered arrivals: the
     open-loop steady state where PR 5's pure megaticks bailed out to
@@ -567,6 +678,12 @@ def bench_ci(out_path="BENCH_ci.json"):
     the victims' freed blocks re-allocatable by a post-cancel
     admission.
 
+    Gate 5 (chaos): the seeded fault plan — poisoned slot + transient
+    dispatch failure + pool spike — then drain->snapshot->restore into
+    a fresh engine: survivors token-identical to a fault-free
+    reference, combined dispatches-per-token (retries included, both
+    engines) <= 1/K, and every resumed request a prefix hit.
+
     Writes BENCH_ci.json and exits nonzero on any violation."""
     n = len(jax.devices())
     W = min(4, n)
@@ -606,6 +723,7 @@ def bench_ci(out_path="BENCH_ci.json"):
         **_bench_ci_megatick(),
         **_bench_ci_mixed(),
         **_bench_ci_cancel(),
+        **_bench_ci_chaos(),
         "bounded_per_slot_scored": int(scored_b),
         "masked_per_slot_scored": int(scored_m),
         "bound_max_blocks_x_block_size": int(bound),
@@ -627,7 +745,9 @@ def bench_ci(out_path="BENCH_ci.json"):
           f"mixed_dpt={report['mixed_dispatches_per_token']};"
           f"mixed_ok={report['mixed_ok']};"
           f"cancel_dpt={report['cancel_dispatches_per_token']};"
-          f"cancel_ok={report['cancel_ok']}")
+          f"cancel_ok={report['cancel_ok']};"
+          f"chaos_dpt={report['chaos_dispatches_per_token']};"
+          f"chaos_ok={report['chaos_ok']}")
     if not report["ok"]:
         sys.exit(f"paged-bounded per-slot work {scored_b} exceeds "
                  f"bound {bound}")
@@ -653,6 +773,16 @@ def bench_ci(out_path="BENCH_ci.json"):
             f"cancels={report['cancel_count']}, "
             f"blocks_freed={report['cancel_blocks_freed']}, "
             f"readmit_tokens={report['cancel_readmit_tokens']}")
+    if not report["chaos_ok"]:
+        sys.exit(
+            f"chaos gate: dispatches-per-token "
+            f"{report['chaos_dispatches_per_token']} vs bound "
+            f"{report['chaos_bound']}, survivors_match="
+            f"{report['chaos_survivors_match_reference']}, "
+            f"victim_finish={report['chaos_victim_finish_reason']}, "
+            f"resumed={report['chaos_resumed']}, prefix_hits="
+            f"{report['chaos_resume_prefix_hits']}, faults="
+            f"{report['chaos_faults_injected']}")
 
 
 def bench_pallas_ag_gemm(W=4):

@@ -76,7 +76,9 @@ async def run_rate(args, cfg, params, rate: float, rng) -> dict:
             prompt = [int(t) for t in
                       rng.integers(1, cfg.vocab_size, plen)]
             tasks.append(asyncio.create_task(cl.complete(
-                host, port, prompt, max_new_tokens=args.max_new)))
+                host, port, prompt, max_new_tokens=args.max_new,
+                retries=args.client_retries,
+                retry_seed=args.seed * 100_003 + i)))
             # open loop: sleep the sampled inter-arrival gap and fire
             # the next request regardless of what has completed
             await asyncio.sleep(float(rng.exponential(1.0 / rate)))
@@ -90,6 +92,11 @@ async def run_rate(args, cfg, params, rate: float, rng) -> dict:
     shed = sum(1 for c in results if c.status == 429)
     timed_out = sum(1 for c in results
                     if c.finish_reason == "timeout")
+    # with --client-retries, a shed arrival that eventually completed
+    # counts as completed WITH retries — the pair (completed, retries)
+    # is the recovered-goodput story
+    total_retries = sum(c.retries for c in results)
+    retried = sum(1 for c in results if c.retries)
     ttfts = [c.ttft_s for c in done if c.ttft_s is not None]
     tpots = [c.tpot_s for c in done if c.tpot_s is not None]
     goodput = sum(len(c.token_ids) for c in done) / max(elapsed, 1e-9)
@@ -99,6 +106,8 @@ async def run_rate(args, cfg, params, rate: float, rng) -> dict:
         "completed": len(done),
         "shed_429": shed,
         "timed_out": timed_out,
+        "client_retries": total_retries,
+        "requests_retried": retried,
         "elapsed_s": round(elapsed, 3),
         "goodput_tok_s": round(goodput, 2),
         "p50_ttft_s": percentile(ttfts, 50),
@@ -124,6 +133,7 @@ async def sweep(args) -> list[dict]:
               f"goodput_tok_s={row['goodput_tok_s']};"
               f"completed={row['completed']}/{row['offered']};"
               f"shed_429={row['shed_429']};"
+              f"client_retries={row['client_retries']};"
               f"p50_ttft_s={row['p50_ttft_s']};"
               f"p99_ttft_s={row['p99_ttft_s']};"
               f"p50_tpot_s={row['p50_tpot_s']};"
@@ -148,6 +158,10 @@ def main(argv=None):
                    help="admission bound: arrivals past it are shed "
                         "with 429 (the backpressure curve)")
     p.add_argument("--timeout-s", type=float, default=None)
+    p.add_argument("--client-retries", type=int, default=0,
+                   help="per-request client retry budget (429/reset/"
+                        "timeout, full-jitter backoff): the recovered-"
+                        "goodput curve vs plain shedding")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default="SERVE_load.json")
     args = p.parse_args(argv)

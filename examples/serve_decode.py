@@ -47,6 +47,13 @@ N tokens — the serving front-end's hang-up/DELETE path at engine level
 pool immediately while its registered prefix chunks stay LRU-resident,
 and the ``cancellations``/``blocks_freed_on_abort`` counters show up
 in the printed metrics.
+``--chaos SEED`` arms a deterministic seeded fault plan
+(``repro.serving.faults.FaultPlan.seeded``, docs/robustness.md) on the
+drive loop: transient dispatch failures are absorbed by bounded retry,
+pool spikes by the allocation guard, poisoned slots retire alone with
+``finish_reason="error"`` — and the ``faults_injected``/
+``dispatch_retries``/``errors`` counters land in the printed metrics.
+Same seed, same faults, same tokens: replay a chaos run bit-for-bit.
 """
 import argparse
 import os
@@ -87,6 +94,11 @@ def main():
                         "CachePool.abort: its blocks are freed for "
                         "waiting requests, every other stream decodes "
                         "exactly what a solo run would produce)")
+    p.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                   help="arm a deterministic seeded fault plan "
+                        "(dispatch/tokens/pool/slow sites) on the "
+                        "drive loop; survivors stay byte-identical "
+                        "and the run replays exactly per seed")
     args = p.parse_args()
 
     cfg = smoke_config(get_config("llama3-8b"))
@@ -95,10 +107,20 @@ def main():
     # 4 slots x 256 tokens): mixed-length traffic fits anyway, because
     # short requests no longer pin max_len worth of HBM — and when the
     # mix does outgrow it, the scheduler preempts instead of failing
+    fault_plan = None
+    if args.chaos is not None:
+        from repro.serving.faults import FaultPlan
+        # engine-visible sites only (socket drops are a server fault)
+        fault_plan = FaultPlan.seeded(
+            args.chaos, n_ticks=64,
+            sites=("dispatch", "tokens", "pool", "slow"), batch=4)
+        print(f"chaos: seed {args.chaos} armed "
+              f"{len(fault_plan.pending())} fault(s)")
     eng = Engine(params, cfg, batch=4, max_len=256, prefill_chunk=8,
                  block_size=16, n_blocks=24, scheduler=args.scheduler,
                  decode_steps=args.decode_steps,
-                 megatick_token_budget=args.megatick_token_budget)
+                 megatick_token_budget=args.megatick_token_budget,
+                 fault_plan=fault_plan)
 
     rng = jax.random.PRNGKey(1)
     rng, ks = jax.random.split(rng)
@@ -163,6 +185,11 @@ def main():
           f"{m['mixed_decode_tokens']} decode tokens "
           f"(combined {m['decode_dispatches_per_token']} decode "
           f"dispatches/token)")
+    if args.chaos is not None:
+        print(f"chaos: {m['faults_injected']} faults injected, "
+              f"{m['dispatch_retries']} retries absorbed, "
+              f"{m['errors']} poisoned request(s) retired, "
+              f"{m['slow_ticks']} slow ticks")
     print(f"engine metrics: {m}")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"  req {r.rid}: reused {r.reused_tokens} prompt tokens, "

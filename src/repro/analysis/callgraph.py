@@ -242,6 +242,21 @@ class ModuleInfo:
         # local name -> (source module, object name) for "from m import f"
         self.imports_from: dict[str, tuple[str, str]] = {}
         self._collect_imports()
+        # module-level NAME = <int literal> bindings: static trip
+        # counts for the dataflow cost walk's bounded-range loops
+        self.int_consts: dict[str, int] = {}
+        for node in self.tree.body if isinstance(self.tree, ast.Module) \
+                else []:
+            tgt = val = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                tgt, val = node.targets[0].id, node.value
+            elif isinstance(node, ast.AnnAssign) \
+                    and isinstance(node.target, ast.Name):
+                tgt, val = node.target.id, node.value
+            if tgt is not None and isinstance(val, ast.Constant) \
+                    and type(val.value) is int:
+                self.int_consts[tgt] = val.value
         # qualname -> FuncInfo for top-level defs and class methods
         self.functions: dict[str, FuncInfo] = {}
         for node in self.tree.body if isinstance(self.tree, ast.Module) \

@@ -16,8 +16,10 @@ whole-program facts the rules consume:
   per call of a function, an upper bound on jitted-program dispatches
   and host readbacks — ``if``/``else`` takes the elementwise max over
   arms, a Python loop whose body spends anything makes the count
-  unbounded, and resolvable project callees contribute their own
-  (memoized) counts.  Suppressed syncs still COUNT here: a justified
+  unbounded — EXCEPT ``for _ in range(N)`` with a statically known N
+  (int literal or module-level int constant), which multiplies the
+  body cost by N so bounded retry loops stay provable — and resolvable
+  project callees contribute their own (memoized) counts.  Suppressed syncs still COUNT here: a justified
   readback is exempt from TAX001's style gate but it still spends real
   budget, which is exactly what the 1/K megatick contract bounds.
 
@@ -80,6 +82,14 @@ class Cost:
         return Cost(max(self.dispatches, other.dispatches),
                     max(self.readbacks, other.readbacks),
                     self.loop_line or other.loop_line)
+
+    def times(self, n: int) -> "Cost":
+        """Scale by a statically known loop trip count (``inf * 0``
+        would be NaN, so a zero-trip loop costs exactly nothing)."""
+        if n == 0:
+            return Cost(0.0, 0.0, self.loop_line)
+        return Cost(self.dispatches * n, self.readbacks * n,
+                    self.loop_line)
 
     @property
     def spends(self) -> bool:
@@ -263,7 +273,12 @@ class Summaries:
                                else head.test, f)
             body_c, _ = self._seq(head.body, f)
             else_c, _ = self._seq(head.orelse, f)
-            loop = _unbounded(head.lineno) if body_c.spends else ZERO
+            if not body_c.spends:
+                loop = ZERO
+            else:
+                trip = self._range_trip(head, f)
+                loop = (body_c.times(trip) if trip is not None
+                        else _unbounded(head.lineno))
             rc, rt = self._seq(rest, f)
             return setup.add(loop).add(else_c).add(rc), rt
         if isinstance(head, (ast.With, ast.AsyncWith)):
@@ -291,6 +306,44 @@ class Summaries:
         # statement children: walk their expressions directly
         rc, rt = self._seq(rest, f)
         return self._expr(head, f).add(rc), rt
+
+    def _range_trip(self, head, f: FuncInfo) -> int | None:
+        """Static trip count of ``for _ in range(N)`` where N is a
+        non-negative int literal or a module-level int constant (one
+        from-import hop away at most).  This is the ONLY loop shape
+        whose spend multiplies instead of diverging — it is what makes
+        a bounded retry-with-backoff loop around a jitted dispatch
+        provable under TAX003 instead of an automatic budget blowout.
+        ``break`` only ever lowers the real count, so N stays a sound
+        upper bound."""
+        if not isinstance(head, ast.For):
+            return None
+        it = head.iter
+        if not (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+                and it.func.id == "range" and len(it.args) == 1
+                and not it.keywords):
+            return None
+        arg = it.args[0]
+        if isinstance(arg, ast.Constant) and type(arg.value) is int:
+            return arg.value if arg.value >= 0 else None
+        if isinstance(arg, ast.Name):
+            n = self._int_const(arg.id, f.module)
+            if n is not None and n >= 0:
+                return n
+        return None
+
+    def _int_const(self, name: str, mod) -> int | None:
+        """Module-level ``NAME = <int literal>`` binding visible from
+        ``mod``, following one ``from m import NAME`` hop."""
+        v = mod.int_consts.get(name)
+        if v is not None:
+            return v
+        imp = mod.imports_from.get(name)
+        if imp is not None:
+            m2 = self.project.resolve_module(imp[0])
+            if m2 is not None:
+                return m2.int_consts.get(imp[1])
+        return None
 
     def _expr(self, node, f: FuncInfo) -> Cost:
         """Cost of evaluating one expression tree. Lambda bodies cost

@@ -9,13 +9,28 @@ The streaming path records per-event wall-clock timestamps, so the
 open-loop bench derives TTFT (submit -> first token event) and TPOT
 (mean inter-token interval) from what actually crossed the wire, not
 from engine-internal stamps.
-"""
+
+Retries (PR 10, docs/robustness.md): ``complete(..., retries=N)``
+re-submits on exactly the RETRYABLE outcomes — shed load (HTTP
+429/503, honouring the server's ``Retry-After`` as a floor), a
+connection that failed or reset before the stream finished, and a
+per-attempt timeout — with capped exponential backoff and FULL JITTER
+drawn from a seeded ``random.Random`` so a chaos run replays the same
+wire schedule every time. A stream the CLIENT chose to abandon
+(``hangup_after_tokens``) never retries, and the attempt count is
+capped: ``retries=N`` means at most N+1 submissions, then the last
+failure is returned as-is. Because a dropped request's KV stays
+prefix-registered server-side, a retry re-streams as a prefix hit
+rather than recomputing."""
 from __future__ import annotations
 
 import asyncio
 import dataclasses
 import json
+import random
 import time
+
+from repro.serving.faults import backoff_s
 
 
 @dataclasses.dataclass
@@ -30,6 +45,8 @@ class Completion:
     t_submit: float = 0.0
     t_first: float | None = None      # first token event on the wire
     t_done: float | None = None
+    retries: int = 0                  # re-submissions before this result
+    retry_after: float | None = None  # server's Retry-After, if any
 
     @property
     def ok(self) -> bool:
@@ -116,8 +133,12 @@ async def complete(host: str, port: int, prompt, *,
                    priority: int | None = None,
                    deadline_ms: float | None = None,
                    hangup_after_tokens: int | None = None,
-                   on_event=None) -> Completion:
-    """POST /v1/completions and (by default) consume the SSE stream.
+                   on_event=None, retries: int = 0,
+                   retry_base_s: float = 0.05, retry_cap_s: float = 2.0,
+                   retry_seed: int = 0,
+                   attempt_timeout_s: float | None = None) -> Completion:
+    """POST /v1/completions and (by default) consume the SSE stream,
+    re-submitting retryable failures up to ``retries`` times.
 
     ``timeout_s`` — pass ``None`` explicitly to disable the server's
     default; the ``...`` sentinel omits the field (server default
@@ -125,7 +146,76 @@ async def complete(host: str, port: int, prompt, *,
     after that many tokens have arrived, simulating a user hang-up
     (the server must cancel the request through the abort path).
     ``on_event`` — optional callback(event_dict) per SSE event.
+
+    ``retries`` — max RE-submissions (total attempts = retries + 1) on
+    HTTP 429/503 (``Retry-After`` honoured as the backoff floor),
+    connect failure/reset, a stream severed before its finish event,
+    or an ``attempt_timeout_s`` expiry. Backoff is capped exponential
+    (``retry_base_s``/``retry_cap_s``) with full jitter from
+    ``random.Random(retry_seed)`` — deterministic per seed, decorrelated
+    across clients. The result's ``retries`` field reports how many
+    re-submissions it took.
     """
+    rng = random.Random(retry_seed)
+    t0 = time.monotonic()
+    attempts = max(1, int(retries) + 1)
+    out = None
+    for attempt in range(1, attempts + 1):
+        try:
+            coro = _complete_once(
+                host, port, prompt, max_new_tokens=max_new_tokens,
+                stream=stream, temp=temp, top_k=top_k,
+                timeout_s=timeout_s, priority=priority,
+                deadline_ms=deadline_ms,
+                hangup_after_tokens=hangup_after_tokens,
+                on_event=on_event)
+            out = await (asyncio.wait_for(coro, attempt_timeout_s)
+                         if attempt_timeout_s is not None else coro)
+        except (ConnectionError, OSError, asyncio.IncompleteReadError,
+                IndexError, ValueError) as e:
+            out = Completion(status=0, error=f"connection failed: {e}")
+        except asyncio.TimeoutError:
+            out = Completion(
+                status=0, error=f"attempt timed out after "
+                                f"{attempt_timeout_s}s")
+        out.retries = attempt - 1
+        out.t_submit = t0               # TTFT spans retries truthfully
+        if attempt == attempts \
+                or not _retryable(out, hangup_after_tokens):
+            return out
+        floor = out.retry_after or 0.0
+        await asyncio.sleep(max(
+            floor, backoff_s(attempt, retry_base_s, retry_cap_s,
+                             rng=rng)))
+    return out
+
+
+def _retryable(out: Completion,
+               hangup_after_tokens: int | None) -> bool:
+    """True for outcomes a re-submission can fix: shed load, a failed
+    connection, or a stream severed before its finish event. A stream
+    the client abandoned on purpose is not one of them."""
+    if out.status in (429, 503):
+        return True
+    if out.status == 0:                 # connect failure / timeout
+        return True
+    if out.status == 200 and out.error is None \
+            and out.finish_reason is None \
+            and hangup_after_tokens is None:
+        return True                     # severed mid-stream (EOF/reset)
+    return False
+
+
+async def _complete_once(host: str, port: int, prompt, *,
+                         max_new_tokens: int = 16, stream: bool = True,
+                         temp: float | None = None,
+                         top_k: int | None = None,
+                         timeout_s: float | None = ...,
+                         priority: int | None = None,
+                         deadline_ms: float | None = None,
+                         hangup_after_tokens: int | None = None,
+                         on_event=None) -> Completion:
+    """One submission attempt — the pre-retry body of :func:`complete`."""
     payload = {"prompt": list(prompt), "max_new_tokens": max_new_tokens,
                "stream": stream}
     if temp is not None:
@@ -145,6 +235,12 @@ async def complete(host: str, port: int, prompt, *,
         writer.write(_request_bytes("POST", "/v1/completions", payload))
         await writer.drain()
         out.status, headers = await _read_status_and_headers(reader)
+        ra = headers.get("retry-after")
+        if ra is not None:
+            try:
+                out.retry_after = float(ra)
+            except ValueError:
+                pass
         ctype = headers.get("content-type", "")
         if out.status != 200 or "text/event-stream" not in ctype:
             n = int(headers.get("content-length", "0") or 0)

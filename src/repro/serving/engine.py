@@ -153,6 +153,31 @@ perturbed — token-identical to solo runs, with the combined 1/K
 dispatch bound still holding (BENCH_ci gate 4 asserts both with aborts
 in flight).
 
+ROBUSTNESS (docs/robustness.md): the engine carries a deterministic
+fault-injection plane (``fault_plan=`` — a seeded
+``repro.serving.faults.FaultPlan`` keyed by (tick, site)) and the
+recovery machinery it exercises. Transient dispatch failures retry
+with bounded deterministic backoff (``DISPATCH_ATTEMPTS`` total
+attempts — a static trip count, so the TAX003 dispatch budgets stay
+provable); pool state commits only on success, so retries replay
+identical inputs. A NaN/Inf guard validates every sampled id read
+back from the device: a poisoned slot retires through the
+``CachePool.abort`` path with ``finish_reason="error"`` and only its
+pre-poison history registered, while co-batched survivors stay
+token-identical to a fault-free run. A monotonic-clock
+``StragglerWatchdog`` times every megatick, and an optional
+``DegradedModeController`` ladder (``degraded=True``) steps the
+engine down under sustained pressure — halve K, then K=1 +
+``bounded_gather=False`` (rebuilding the jitted closures), then shed
+intake — and back up after sustained health; every rung is
+token-identical by the gated K-/gather-variation invariants.
+``drain()`` parks all in-flight work at a clean boundary via the
+preemption path; ``snapshot()``/``restore()`` round-trip the full
+serving state through ``checkpoint.Checkpointer`` so a killed server
+resumes every unfinished request as a prefix hit (BENCH_ci gate 5
+asserts survivor identity, the 1/K bound with faults in flight, and
+the drain→restore prefix-hit resume).
+
 Per-request metrics: TTFT (submit -> first generated token) and TPOT
 (mean inter-token time over the generated tokens); engine metrics add
 p50/p99 latency tails, preemption/reclaim counters, and block
@@ -168,8 +193,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.fault_tolerance import StragglerWatchdog
 from repro.models import lm
 from repro.serving import sampler as sampler_lib
+from repro.serving.faults import (DISPATCH_ATTEMPTS, DegradedModeController,
+                                  DispatchFailedError, FaultPlan,
+                                  TransientDispatchError, backoff_s)
 from repro.serving.kv_cache import CachePool, pow2_bucket
 from repro.serving.metrics import latency_summary
 from repro.serving.scheduler import SchedulerPolicy, get_scheduler
@@ -193,6 +222,8 @@ class Request:
     seq: int = 0                     # submission order (engine-stamped)
     done: bool = False
     cancelled: bool = False          # aborted mid-stream (Engine.cancel)
+    finish_reason: str | None = None  # "length" | "cancelled" | "error"
+    error: str | None = None         # human-readable poison/fault reason
     submitted_t: float = 0.0
     admitted_t: float = 0.0
     first_token_t: float = 0.0
@@ -285,7 +316,12 @@ class Engine:
                  scheduler: str | SchedulerPolicy = "fcfs",
                  decode_steps: int = 1,
                  megatick_token_budget: int | None = None,
-                 bounded_gather: bool = True):
+                 bounded_gather: bool = True,
+                 fault_plan: FaultPlan | None = None,
+                 watchdog: StragglerWatchdog | None = None,
+                 degraded: DegradedModeController | bool | None = None,
+                 retry_backoff_s: float = 0.02,
+                 retry_backoff_cap_s: float = 0.5):
         if sampler not in ("greedy", "temperature"):
             raise ValueError(f"unknown sampler {sampler!r}: "
                              f"expected 'greedy' or 'temperature'")
@@ -310,6 +346,7 @@ class Engine:
         self.pool = CachePool(params, cfg, batch, max_len,
                               block_size=block_size, n_blocks=n_blocks)
         self.sampler = sampler
+        self.seed = int(seed)
         self._base_key = jax.random.PRNGKey(seed)
         self.decode_steps = int(decode_steps)
         self.megatick_tokens = (int(megatick_token_budget)
@@ -337,6 +374,34 @@ class Engine:
         self.mixed_decode_token_count = 0
         self._seq = 0               # submission order stamp
         self.bounded_gather = bool(bounded_gather)
+        # -------- robustness plane (docs/robustness.md) --------------
+        # faults: a deterministic FaultPlan keyed by (tick, site); ticks
+        # are 1-based — a spec with tick=t fires during the t-th tick()
+        self.faults = fault_plan
+        self.watchdog = (watchdog if watchdog is not None
+                         else StragglerWatchdog())
+        if degraded is True:
+            degraded = DegradedModeController()
+        self.degraded = degraded or None
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.retry_backoff_cap_s = float(retry_backoff_cap_s)
+        self._cfg_bounded = bool(bounded_gather)  # configured gather mode
+        self._spike_until = None    # tick the seized pool blocks return
+        self.dispatch_retry_count = 0    # retried megatick dispatches
+        self.dispatch_failure_count = 0  # retry budgets exhausted
+        self.error_count = 0             # slots retired finish_reason=error
+        self.slow_tick_count = 0         # watchdog-flagged megaticks
+        self.drain_count = 0             # requests parked by drain()
+        self._build_dispatchers()
+
+    def _build_dispatchers(self):
+        """(Re)build the jitted dispatch closures. They capture
+        ``bounded_gather`` at closure-construction time, so the
+        degraded-mode fallback to the masked-pool oracle path
+        (level >= 2) rebuilds them instead of mutating a flag the
+        compiled programs can no longer see."""
+        cfg = self.cfg
+        sampler = self.sampler
         # two jitted paths sharing the pool state: a 1-token step for
         # all-decoding ticks, a C-token scan when any slot is prefilling.
         # gw is the STATIC gather width (power-of-two bucket of the
@@ -517,6 +582,7 @@ class Engine:
                 self.queue.remove(req)
                 req.done = True
                 req.cancelled = True
+                req.finish_reason = req.finish_reason or "cancelled"
                 self.cancel_count += 1
                 return True
         for slot, req in list(self.active.items()):
@@ -531,6 +597,7 @@ class Engine:
             req.slot = -1
             req.done = True
             req.cancelled = True
+            req.finish_reason = req.finish_reason or "cancelled"
             self.cancel_count += 1
             return True
         return False
@@ -540,24 +607,125 @@ class Engine:
         megatick paths so the decode_steps=1 vs K>1 identity the gates
         rely on cannot drift through one-sided edits."""
         req.done = True
+        req.finish_reason = req.finish_reason or "length"
         req.finished_t = now
         finished.append(req)
         del self.active[slot]
         self.pool.free(slot)
 
+    # ------------------------------------------------------- fault plane
+    @property
+    def eff_decode_steps(self) -> int:
+        """Megatick length after the degraded-mode ladder: level 1
+        halves K, level >= 2 forces the single-step path. Every level
+        is token-identical to the configured K (the gated K-variation
+        invariant) — degrading trades throughput for stability, never
+        correctness."""
+        if self.degraded is None or self.degraded.level == 0:
+            return self.decode_steps
+        if self.degraded.level == 1:
+            return max(self.decode_steps // 2, 1)
+        return 1
+
+    @property
+    def shedding(self) -> bool:
+        """Level 3: the front-end should refuse new intake (429)."""
+        return self.degraded is not None and self.degraded.level >= 3
+
+    def _poll_fault(self, site: str):
+        """The (tick, site)-keyed injection lookup; None when no plan
+        is armed or the key already fired."""
+        if self.faults is None:
+            return None
+        return self.faults.poll(site, self.tick_count)
+
+    def _apply_faults(self):
+        """Tick-boundary fault application: pool-exhaustion spikes
+        (seize free blocks now, release them when the hold expires)
+        and slow ticks (injected wall-clock stall, watchdog food).
+        Dispatch and token faults are applied at their own sites."""
+        if self._spike_until is not None \
+                and self.tick_count >= self._spike_until:
+            self.pool.release_seized()
+            self._spike_until = None
+        if self.faults is None:
+            return
+        spec = self.faults.poll("pool", self.tick_count)
+        if spec is not None:
+            self.pool.seize_blocks(spec.blocks)
+            self._spike_until = self.tick_count + max(spec.hold_ticks, 1)
+        spec = self.faults.poll("slow", self.tick_count)
+        if spec is not None:
+            time.sleep(spec.delay_s)
+
+    def _backoff(self, attempt: int):
+        """Deterministic exponential backoff between dispatch attempts
+        (no jitter: one engine, one schedule — replayable; the CLIENT
+        side decorrelates with full jitter instead)."""
+        self.dispatch_retry_count += 1
+        time.sleep(backoff_s(attempt, self.retry_backoff_s,
+                             self.retry_backoff_cap_s))
+
+    def _retire_error(self, slot: int, req: Request, now: float,
+                      finished, reason: str):
+        """Per-request error isolation: retire a POISONED slot through
+        the ``CachePool.abort`` path with ``finish_reason="error"``.
+        Only the pre-poison history (consumed prompt prefix + tokens
+        that passed the guard) is registered into the prefix cache —
+        ``register_prompt_chunks`` registers ``min(written, len(tokens))``
+        worth of full chunks, so KV written past the clean history can
+        never be served to a future prefix hit. Co-batched survivors
+        are untouched: their streams depend only on their own history
+        and (seed, rid, token-index) sampler keys, so they stay
+        token-identical to a fault-free run (gated by BENCH_ci gate 5
+        and tests/test_faults.py)."""
+        history = (list(req.eff_prompt[:req.consumed])
+                   + list(req.out_tokens))
+        self.pool.abort(slot, history)
+        del self.active[slot]
+        req.slot = -1
+        req.done = True
+        req.error = reason
+        req.finish_reason = "error"
+        req.finished_t = now
+        self.error_count += 1
+        finished.append(req)
+
     # ----------------------------------------------------------- scheduling
     def tick(self) -> list[Request]:
-        """One scheduler step. Returns requests that finished this tick."""
+        """One scheduler step. Returns requests that finished this tick.
+
+        Wraps the dispatch path with the robustness plane: the
+        megatick wall-clock watchdog (monotonic clock — serving
+        megaticks are milliseconds, NTP slew would look like a
+        straggler) and the degraded-mode ladder, which observes
+        adverse ticks (watchdog-slow, dispatch retries, poisoned
+        slots) and steps K/gather-mode/shedding down under sustained
+        pressure, back up after sustained health."""
+        r0, e0 = self.dispatch_retry_count, self.error_count
+        t0 = time.monotonic()
         finished = self._tick()
+        slow = self.watchdog.timed(self.tick_count, t0)
+        if slow:
+            self.slow_tick_count += 1
+        if self.degraded is not None:
+            adverse = (slow or self.dispatch_retry_count > r0
+                       or self.error_count > e0)
+            lvl = self.degraded.observe(adverse)
+            want_bounded = self._cfg_bounded and lvl < 2
+            if want_bounded != self.bounded_gather:
+                self.bounded_gather = want_bounded
+                self._build_dispatchers()
         self.policy.on_tick_end(self.queue, self.active, self.tick_count)
         return finished
 
     def _tick(self) -> list[Request]:
         self._admit()
         self.tick_count += 1
+        self._apply_faults()
         if not self.active:
             return []
-        if self.decode_steps > 1:
+        if self.eff_decode_steps > 1:
             # megatick engines never fall back to one-dispatch-per-token:
             # a batch with prefill in flight runs the fused MIXED program
             # (prompt chunks piggyback on the decode scan), a pure-decode
@@ -604,19 +772,46 @@ class Engine:
         self.dispatch_count += 1
         if not any_prefill:
             self.decode_dispatch_count += 1
-        if cmax <= 1:
-            logits, self.pool.state = self._step1(
-                self.params, jnp.asarray(tok[:, :1]),
-                jnp.asarray(cnt > 0), self.pool.state, gw)
+        # bounded retry-with-backoff around the ONE jitted dispatch:
+        # pool state commits only on success, so a retried attempt
+        # replays identical inputs (transient failures are safe to
+        # retry; retries count against the TAX003 budget as real
+        # worst-case dispatches — DISPATCH_ATTEMPTS is a static trip)
+        fault = self._poll_fault("dispatch")
+        for attempt in range(DISPATCH_ATTEMPTS):
+            if attempt:
+                self._backoff(attempt)
+            try:
+                if fault is not None:
+                    fault.trip()
+                if cmax <= 1:
+                    logits, state = self._step1(
+                        self.params, jnp.asarray(tok[:, :1]),
+                        jnp.asarray(cnt > 0), self.pool.state, gw)
+                else:
+                    # bucket the scan length to the next power of two so
+                    # ticks with little prefill left don't pay the full
+                    # chunk, while compile count stays bounded at
+                    # log2(prefill_chunk)
+                    cw = pow2_bucket(cmax, C)
+                    logits, state = self._stepC(
+                        self.params, jnp.asarray(tok[:, :cw]),
+                        jnp.asarray(cnt), self.pool.state, gw)
+                break
+            except TransientDispatchError as err:
+                last_err = err
         else:
-            # bucket the scan length to the next power of two so ticks
-            # with little prefill left don't pay the full chunk, while
-            # compile count stays bounded at log2(prefill_chunk)
-            cw = pow2_bucket(cmax, C)
-            logits, self.pool.state = self._stepC(
-                self.params, jnp.asarray(tok[:, :cw]), jnp.asarray(cnt),
-                self.pool.state, gw)
+            self.dispatch_failure_count += 1
+            raise DispatchFailedError(
+                f"dispatch failed after {DISPATCH_ATTEMPTS} attempts at "
+                f"tick {self.tick_count}") from last_err
+        self.pool.state = state
         nxt = self._next_tokens(logits, emit)
+        poison = self._poll_fault("tokens")
+        if poison is not None:
+            # the host-visible signature of NaN/Inf logits: a garbage
+            # (out-of-range) sampled id for exactly one slot
+            nxt[poison.slot % self.batch, :] = -1
 
         finished = []
         now = time.time()
@@ -643,7 +838,16 @@ class Engine:
                 # the logits after this slot's last consumed token give
                 # the next output token (the first one arrives on the
                 # tick that completes the prefill)
-                req.out_tokens.append(int(nxt[slot, 0]))
+                t = int(nxt[slot, 0])
+                if not 0 <= t < self.cfg.vocab_size:
+                    # NaN/Inf guard: a sampled id outside the vocab is
+                    # the readback signature of non-finite logits —
+                    # retire THIS slot as an error, survivors untouched
+                    self._retire_error(
+                        slot, req, now, finished,
+                        f"non-finite logits: sampled token id {t}")
+                    continue
+                req.out_tokens.append(t)
                 if not any_prefill:
                     self.decode_token_count += 1
                 if len(req.out_tokens) == 1:
@@ -661,7 +865,7 @@ class Engine:
         for the whole megatick; a slot past its budget freezes
         byte-identically inside the scan. Sampling is device-resident —
         the host gets back (B, K) token ids, not K logit tensors."""
-        K = self.decode_steps
+        K = self.eff_decode_steps
         tok = np.zeros((self.batch, 1), np.int32)
         budgets = np.zeros((self.batch,), np.int32)
         rids = np.zeros((self.batch,), np.int32)
@@ -698,14 +902,38 @@ class Engine:
         kb = pow2_bucket(kmax, K)
         self.dispatch_count += 1
         self.decode_dispatch_count += 1
-        out, self.pool.state = self._stepK(
-            self.params, jnp.asarray(tok), jnp.asarray(budgets),
-            self.pool.state, jnp.asarray(rids), jnp.asarray(steps0),
-            jnp.asarray(temps), jnp.asarray(topks), kb, gw)
+        # bounded retry-with-backoff: pool state commits only on
+        # success, so a retried attempt replays identical inputs
+        fault = self._poll_fault("dispatch")
+        for attempt in range(DISPATCH_ATTEMPTS):
+            if attempt:
+                self._backoff(attempt)
+            try:
+                if fault is not None:
+                    fault.trip()
+                out, state = self._stepK(
+                    self.params, jnp.asarray(tok), jnp.asarray(budgets),
+                    self.pool.state, jnp.asarray(rids),
+                    jnp.asarray(steps0), jnp.asarray(temps),
+                    jnp.asarray(topks), kb, gw)
+                break
+            except TransientDispatchError as err:
+                last_err = err
+        else:
+            self.dispatch_failure_count += 1
+            raise DispatchFailedError(
+                f"megatick dispatch failed after {DISPATCH_ATTEMPTS} "
+                f"attempts at tick {self.tick_count}") from last_err
+        self.pool.state = state
         # taxlint: ignore[TAX001] the megatick's ONE designed sync: (B, K)
         # token ids — not K logit tensors — come back to drive Python-side
         # scheduling; amortized over K tokens, this IS the 1/K bound
         out = np.asarray(out)
+        poison = self._poll_fault("tokens")
+        if poison is not None:
+            # the host-visible signature of NaN/Inf logits mid-megatick
+            out = out.copy()
+            out[poison.slot % self.batch, :] = -1
 
         finished = []
         now = time.time()
@@ -713,8 +941,25 @@ class Engine:
             n = int(budgets[slot])
             if n == 0:
                 continue
+            row = out[slot, :n]
+            bad = np.nonzero((row < 0) | (row >= self.cfg.vocab_size))[0]
+            if bad.size:
+                # NaN/Inf guard: keep the tokens sampled BEFORE the
+                # first garbage id (their logits were still finite),
+                # advance the host length mirror only that far so the
+                # prefix registry can never serve poisoned KV, and
+                # retire THIS slot as an error — survivors untouched
+                good = int(bad[0])
+                self.pool.advance(slot, good)
+                req.out_tokens.extend(int(t) for t in row[:good])
+                self.decode_token_count += good
+                self._retire_error(
+                    slot, req, now, finished,
+                    f"non-finite logits: sampled token id "
+                    f"{int(row[good])}")
+                continue
             self.pool.advance(slot, n)
-            req.out_tokens.extend(int(t) for t in out[slot, :n])
+            req.out_tokens.extend(int(t) for t in row)
             self.decode_token_count += n
             if self.cfg.sliding_window is not None:
                 self.pool.reclaim_out_of_window(slot,
@@ -749,7 +994,7 @@ class Engine:
         back (B, S) token ids, S pow2-bucketed and capped at M. If every
         slot's reservation is 0, the policy's victim is preempted, as
         every other dispatch path does."""
-        K = self.decode_steps
+        K = self.eff_decode_steps
         M = self.megatick_tokens
         toks = np.zeros((self.batch, M), np.int32)
         tok0 = np.zeros((self.batch, 1), np.int32)
@@ -812,17 +1057,42 @@ class Engine:
         self.dispatch_count += 1
         self.mixed_dispatch_count += 1
         self.mixed_prompt_token_count += int(pl.sum())
-        out, self.pool.state = self._stepM(
-            self.params, jnp.asarray(toks[:, :S]), jnp.asarray(tok0),
-            jnp.asarray(pl), jnp.asarray(e0), jnp.asarray(tot),
-            self.pool.state, jnp.asarray(rids), jnp.asarray(steps0),
-            jnp.asarray(temps), jnp.asarray(topks), S, gw)
+        # bounded retry-with-backoff: pool state commits only on
+        # success, so a retried attempt replays identical inputs
+        fault = self._poll_fault("dispatch")
+        for attempt in range(DISPATCH_ATTEMPTS):
+            if attempt:
+                self._backoff(attempt)
+            try:
+                if fault is not None:
+                    fault.trip()
+                out, state = self._stepM(
+                    self.params, jnp.asarray(toks[:, :S]),
+                    jnp.asarray(tok0), jnp.asarray(pl), jnp.asarray(e0),
+                    jnp.asarray(tot), self.pool.state, jnp.asarray(rids),
+                    jnp.asarray(steps0), jnp.asarray(temps),
+                    jnp.asarray(topks), S, gw)
+                break
+            except TransientDispatchError as err:
+                last_err = err
+        else:
+            self.dispatch_failure_count += 1
+            raise DispatchFailedError(
+                f"mixed megatick dispatch failed after "
+                f"{DISPATCH_ATTEMPTS} attempts at tick "
+                f"{self.tick_count}") from last_err
+        self.pool.state = state
         # taxlint: ignore[TAX001] the mixed megatick's ONE designed sync:
         # (B, S) sampled-token ids — not per-step logit tensors — come
         # back to drive Python-side scheduling; amortized over the
         # megatick's prompt+decode tokens, this IS the 1/K bound under
         # continuous arrivals
         out = np.asarray(out)
+        poison = self._poll_fault("tokens")
+        if poison is not None:
+            # the host-visible signature of NaN/Inf logits mid-megatick
+            out = out.copy()
+            out[poison.slot % self.batch, :] = -1
 
         finished = []
         now = time.time()
@@ -830,8 +1100,31 @@ class Engine:
             n = int(tot[slot])
             if n == 0:
                 continue
-            self.pool.advance(slot, n)
             p = int(pl[slot])
+            first_emit = int(e0[slot])
+            emitted = n - first_emit
+            span = out[slot, first_emit:n] if emitted > 0 \
+                else out[slot, :0]
+            bad = np.nonzero((span < 0)
+                             | (span >= self.cfg.vocab_size))[0]
+            if bad.size:
+                # NaN/Inf guard, mixed shape: prompt-chunk writes are
+                # real tokens (always clean); of the sampled span keep
+                # only the ids before the first garbage one. Advance
+                # the host length mirror over prompt writes + clean
+                # sampled writes so the prefix registry never serves
+                # poisoned KV, then retire THIS slot as an error.
+                good = int(bad[0])
+                self.pool.advance(slot, min(n, p + good))
+                req.consumed += p
+                req.out_tokens.extend(int(t) for t in span[:good])
+                self.mixed_decode_token_count += good
+                self._retire_error(
+                    slot, req, now, finished,
+                    f"non-finite logits: sampled token id "
+                    f"{int(span[good])}")
+                continue
+            self.pool.advance(slot, n)
             if p:
                 req.consumed += p
                 # full prompt chunks just written become shareable
@@ -840,11 +1133,9 @@ class Engine:
             if self.cfg.sliding_window is not None:
                 self.pool.reclaim_out_of_window(slot,
                                                 self.cfg.sliding_window)
-            emitted = n - int(e0[slot])
             if emitted > 0:
                 first = not req.out_tokens
-                req.out_tokens.extend(int(t)
-                                      for t in out[slot, int(e0[slot]):n])
+                req.out_tokens.extend(int(t) for t in span)
                 self.mixed_decode_token_count += emitted
                 if first:
                     req.first_token_t = now
@@ -898,6 +1189,115 @@ class Engine:
             finished.extend(self.tick())
         return finished
 
+    # --------------------------------------------- drain / snapshot / restore
+    def drain(self) -> list[Request]:
+        """Park every in-flight request at a clean boundary: each
+        ACTIVE slot takes the preemption path (generated tokens fold
+        into the effective prompt, fully-written chunks register as
+        prefix blocks, private blocks free), then rejoins the queue
+        AHEAD of never-started requests in slot order. After drain the
+        engine holds no active slots and any seized fault-injection
+        blocks are back in the pool — the state is checkpointable, and
+        resuming (here or in a restored engine) re-admits every parked
+        request as a prefix hit. Returns the drained queue snapshot."""
+        if self._spike_until is not None:
+            self.pool.release_seized()
+            self._spike_until = None
+        parked = []
+        for slot in sorted(self.active):
+            req = self.active[slot]
+            req.eff_prompt = list(req.prompt) + list(req.out_tokens)
+            self.pool.preempt(slot, req.eff_prompt)
+            req.slot = -1
+            req.consumed = 0
+            req.reused_tokens = 0
+            parked.append(req)
+        self.active.clear()
+        for req in reversed(parked):
+            self.queue.appendleft(req)
+        self.drain_count += len(parked)
+        return list(self.queue)
+
+    def _req_payload(self, req: Request) -> dict:
+        return {"rid": req.rid, "prompt": list(req.prompt),
+                "max_new_tokens": req.max_new_tokens,
+                "temp": req.temp, "top_k": req.top_k,
+                "priority": req.priority, "deadline_ms": req.deadline_ms,
+                "out_tokens": list(req.out_tokens),
+                "preemptions": req.preemptions, "seq": req.seq,
+                "submitted_t": req.submitted_t,
+                "first_token_t": req.first_token_t}
+
+    def snapshot(self, ckpt, step: int | None = None,
+                 block: bool = True) -> int:
+        """Drain, then persist the full serving state through a
+        ``checkpoint.Checkpointer``: the device-side pool state pytree
+        (KV pages, tables, positions) as the checkpoint tree, and the
+        JSON-able host half — queued requests (with generated-so-far
+        tokens) plus the pool's host bookkeeping incl. the prefix-chain
+        registry — in the manifest's ``extra``. A killed server that
+        restores this resumes every unfinished request as a PREFIX HIT:
+        the KV it already computed is still resident. Returns the step
+        the checkpoint was written under."""
+        self.drain()
+        step = self.tick_count if step is None else step
+        extra = {"serving": {
+            "sampler": self.sampler, "seed": self.seed,
+            "requests": [self._req_payload(r) for r in self.queue],
+            "pool": self.pool.snapshot_meta(),
+        }}
+        # npz can't round-trip ml_dtypes (bf16 KV pages come back as
+        # raw void): widen those leaves to float32 — exact for bf16 —
+        # and restore() narrows them back to the live state's dtypes
+        def _cast(x):
+            x = np.asarray(x)
+            return (np.asarray(x, np.float32)
+                    if x.dtype.kind not in "fiub" else x)
+        tree = jax.tree_util.tree_map(_cast, self.pool.state)
+        ckpt.save(step, tree, extra=extra, block=block)
+        return step
+
+    def restore(self, ckpt, step: int | None = None) -> list[Request]:
+        """Load a :meth:`snapshot` into THIS engine (freshly built with
+        the same pool geometry, sampler, and seed — geometry is
+        validated, identity knobs are asserted here because a
+        different (sampler, seed) would silently change every resumed
+        stream). Queued requests are rebuilt with their effective
+        prompts (original prompt + generated tokens), so the next
+        ticks re-admit them against the restored prefix registry: the
+        blocks they already wrote are hits, not re-prefills. Returns
+        the restored requests in queue order."""
+        tree, manifest = ckpt.restore(step, self.pool.state)
+        meta = manifest["extra"]["serving"]
+        if (meta["sampler"], meta["seed"]) != (self.sampler, self.seed):
+            raise ValueError(
+                f"snapshot sampler/seed ({meta['sampler']!r}, "
+                f"{meta['seed']}) != engine ({self.sampler!r}, "
+                f"{self.seed}): restored streams would diverge")
+        self.pool.state = jax.tree_util.tree_map(
+            lambda cur, x: jnp.asarray(x, dtype=cur.dtype),
+            self.pool.state, tree)
+        self.pool.restore_meta(meta["pool"])
+        self.queue.clear()
+        restored = []
+        for d in meta["requests"]:
+            r = Request(rid=d["rid"], prompt=list(d["prompt"]),
+                        max_new_tokens=d["max_new_tokens"],
+                        temp=d["temp"], top_k=d["top_k"],
+                        priority=d["priority"],
+                        deadline_ms=d["deadline_ms"])
+            r.out_tokens = list(d["out_tokens"])
+            r.eff_prompt = list(r.prompt) + list(r.out_tokens)
+            r.preemptions = d["preemptions"]
+            r.seq = d["seq"]
+            r.submitted_t = d["submitted_t"]
+            r.first_token_t = d["first_token_t"]
+            r.arrival_tick = 0          # admissible immediately
+            self.queue.append(r)
+            restored.append(r)
+        self._seq = max([r.seq for r in restored], default=-1) + 1
+        return restored
+
     # -------------------------------------------------------------- metrics
     def metrics(self, done: list[Request]) -> dict:
         toks = sum(len(r.out_tokens) for r in done)
@@ -942,6 +1342,23 @@ class Engine:
             # admissions (the serve-smoke CI gate quantity)
             "cancellations": self.cancel_count,
             "blocks_freed_on_abort": self.blocks_freed_on_abort,
+            # robustness counters (docs/robustness.md): injected
+            # faults, absorbed dispatch retries (they count against
+            # the 1/K budget as real dispatches — gate 5's numerator
+            # includes them), exhausted retry budgets, poisoned slots
+            # retired finish_reason="error", watchdog-slow megaticks,
+            # the degraded-mode ladder position, and drained requests
+            "faults_injected": (self.faults.injected
+                                if self.faults is not None else 0),
+            "dispatch_retries": self.dispatch_retry_count,
+            "dispatch_failures": self.dispatch_failure_count,
+            "errors": self.error_count,
+            "slow_ticks": self.slow_tick_count,
+            "degraded_mode": (self.degraded.level
+                              if self.degraded is not None else 0),
+            "degraded_transitions": (self.degraded.transitions
+                                     if self.degraded is not None else 0),
+            "drained_requests": self.drain_count,
             **latency_summary(ttfts, "ttft"),
             **latency_summary(tpots, "tpot"),
             **self.pool.metrics(),

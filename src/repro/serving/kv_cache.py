@@ -177,6 +177,8 @@ class CachePool:
         self.preempted_slots = 0
         self.aborted_slots = 0         # mid-stream cancellations (abort())
         self.blocks_reclaimed = 0      # sliding-window dead-block frees
+        self._seized: list[int] = []   # fault injection: held-back blocks
+        self.blocks_seized = 0         # cumulative seize count
 
     # ----------------------------------------------------------- block layer
     def _pop_block(self) -> int | None:
@@ -520,6 +522,80 @@ class CachePool:
             self._dirty = True
         return freed
 
+    # ---------------------------------------------------- fault injection
+    def seize_blocks(self, n: int) -> int:
+        """Fault injection: pull up to ``n`` blocks out of the FREE
+        list so they back nothing until :meth:`release_seized` — a
+        deterministic pool-exhaustion spike. Only free supply is
+        seized (never residents, never referenced blocks), so the
+        spike starves admission/growth exactly the way a burst of
+        long requests would; the normal preemption/eviction machinery
+        is what absorbs it. Returns how many blocks were taken."""
+        taken = []
+        while self._free and len(taken) < n:
+            taken.append(self._free.pop())
+        self._seized.extend(taken)
+        self.blocks_seized += len(taken)
+        return len(taken)
+
+    def release_seized(self) -> int:
+        """Return every seized block to the free list (spike over)."""
+        n = len(self._seized)
+        self._free.extend(reversed(self._seized))
+        self._seized = []
+        return n
+
+    # ------------------------------------------------- snapshot / restore
+    def snapshot_meta(self) -> dict:
+        """JSON-serializable host bookkeeping (the device-side
+        ``self.state`` pytree travels separately through the
+        Checkpointer). Captures everything :meth:`restore_meta` needs
+        to resurrect the pool bit-for-bit: tables, lengths, refcounts,
+        free-list ORDER (allocation order determines block ids, which
+        determine nothing semantically but keep restored runs
+        byte-comparable), LRU order, and the prefix-chain registry
+        (``_index``/``_children`` are derived from ``_key_of``)."""
+        return {
+            "geometry": {"batch": self.batch, "max_len": self.max_len,
+                         "block_size": self.block_size,
+                         "n_blocks": self.n_blocks},
+            "tables": self.tables.tolist(),
+            "lengths": self.lengths.tolist(),
+            "active": self.active.tolist(),
+            "ref": self.ref.tolist(),
+            "free": list(self._free),
+            "lru": list(self._lru.keys()),
+            "key_of": [[b, key[0], list(key[1])]
+                       for b, key in self._key_of.items()],
+        }
+
+    def restore_meta(self, meta: dict):
+        """Rebuild host bookkeeping from :meth:`snapshot_meta` output.
+        The pool must have the same geometry it was snapshotted with —
+        block ids are geometry-relative, so restoring into a different
+        shape would silently corrupt; raise instead."""
+        g = meta["geometry"]
+        mine = {"batch": self.batch, "max_len": self.max_len,
+                "block_size": self.block_size, "n_blocks": self.n_blocks}
+        if g != mine:
+            raise ValueError(
+                f"pool geometry mismatch: snapshot {g} vs engine {mine}")
+        self.tables = np.asarray(meta["tables"], np.int32)
+        self.lengths = np.asarray(meta["lengths"], np.int32)
+        self.active = np.asarray(meta["active"], bool)
+        self.ref = np.asarray(meta["ref"], np.int32)
+        self._free = [int(b) for b in meta["free"]]
+        self._lru = OrderedDict((int(b), True) for b in meta["lru"])
+        self._seized = []
+        self._key_of = {int(b): (int(parent), tuple(toks))
+                        for b, parent, toks in meta["key_of"]}
+        self._index = {key: b for b, key in self._key_of.items()}
+        self._children = {}
+        for b, (parent, _) in self._key_of.items():
+            if parent >= 0:
+                self._children.setdefault(parent, set()).add(b)
+        self._dirty = True
+
     def advance(self, slot: int, n: int):
         """Record that `slot` consumed n tokens this tick (host mirror;
         the device cur_len advanced inside the jitted step)."""
@@ -564,4 +640,5 @@ class CachePool:
             "block_evictions": self.evictions,
             "kv_blocks_reclaimed": self.blocks_reclaimed,
             "kv_slots_aborted": self.aborted_slots,
+            "kv_blocks_seized": self.blocks_seized,
         }

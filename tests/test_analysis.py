@@ -305,12 +305,15 @@ def test_tax003_clean_at_budget(tmp_path):
     assert rule_ids(suppressed) == ["TAX001"]
 
 
-def test_tax003_fires_on_second_dispatch(tmp_path):
-    code = TAX003_GOOD.replace("out = self._stepK(0)",
-                               "out = self._stepK(self._stepK(0))")
+def test_tax003_fires_past_the_retry_budget(tmp_path):
+    # _megatick's budget is (3, 1) — one fused dispatch times the
+    # DISPATCH_ATTEMPTS retry bound; a fourth reachable dispatch fires
+    code = TAX003_GOOD.replace(
+        "out = self._stepK(0)",
+        "out = self._stepK(self._stepK(self._stepK(self._stepK(0))))")
     findings, suppressed = lint(tmp_path, "serving/engine.py", code)
     assert rule_ids(findings) == ["TAX003"]
-    assert "2 jitted dispatch(es)" in findings[0].message
+    assert "4 jitted dispatch(es)" in findings[0].message
     assert rule_ids(suppressed) == ["TAX001"]
 
 
@@ -328,13 +331,79 @@ def test_tax003_counts_suppressed_readbacks(tmp_path):
     assert rule_ids(suppressed) == ["TAX001", "TAX001"]
 
 
-def test_tax003_unbounded_on_dispatch_in_loop(tmp_path):
+def test_tax003_unbounded_on_dispatch_in_while_loop(tmp_path):
+    # a spending loop with no statically-resolvable trip count is an
+    # outright failure, not a guess
     code = TAX003_GOOD.replace(
         "out = self._stepK(0)",
-        "for i in range(4):\n                out = self._stepK(i)")
+        "while self.go:\n                out = self._stepK(0)")
     findings, _ = lint(tmp_path, "serving/engine.py", code)
     assert rule_ids(findings) == ["TAX003"]
     assert "unbounded" in findings[0].message
+
+
+def test_tax003_bounded_range_loop_multiplies(tmp_path):
+    # the retry idiom: `for attempt in range(<literal>)` multiplies the
+    # body's cost by the trip count instead of failing as unbounded —
+    # 3 dispatches fits _megatick's (3, 1), 4 exceeds it
+    ok = TAX003_GOOD.replace(
+        "out = self._stepK(0)",
+        "for i in range(3):\n                out = self._stepK(i)")
+    findings, _ = lint(tmp_path, "serving/engine.py", ok)
+    assert findings == []
+    over = TAX003_GOOD.replace(
+        "out = self._stepK(0)",
+        "for i in range(4):\n                out = self._stepK(i)")
+    findings, _ = lint(tmp_path, "serving/engine.py", over)
+    assert rule_ids(findings) == ["TAX003"]
+    assert "4 jitted dispatch(es)" in findings[0].message
+
+
+def test_tax003_range_over_nonconst_is_unbounded(tmp_path):
+    # only a literal or module-level int constant bounds the loop; a
+    # runtime-computed width stays unbounded
+    code = TAX003_GOOD.replace(
+        "out = self._stepK(0)",
+        "n = self.n\n"
+        "            for i in range(n):\n                "
+        "out = self._stepK(i)")
+    findings, _ = lint(tmp_path, "serving/engine.py", code)
+    assert rule_ids(findings) == ["TAX003"]
+    assert "unbounded" in findings[0].message
+
+
+def test_tax003_range_const_resolves_across_import(tmp_path):
+    # the real shape in serving/engine.py: `for attempt in
+    # range(DISPATCH_ATTEMPTS)` with the constant imported from
+    # serving/faults.py — the one-hop from-import resolves, making the
+    # retry loop a provable 3, and a drive-by bump of the constant to
+    # 4 becomes a lint failure instead of a silent budget break
+    findings, _, _ = multi(tmp_path, {
+        "serving/faults.py": "ATTEMPTS = 3\n",
+        "serving/engine.py": """
+            import jax
+            import numpy as np
+            from serving.faults import ATTEMPTS
+
+            class Engine:
+                def __init__(self, fn):
+                    self._stepK = jax.jit(fn)
+
+                def _megatick(self):
+                    for attempt in range(ATTEMPTS):
+                        out = self._stepK(attempt)
+                    # taxlint: ignore[TAX001] one per-dispatch readback
+                    out = np.asarray(out)
+                    return out
+        """,
+    })
+    assert findings == []
+    findings, _, _ = multi(tmp_path, {
+        "serving/faults.py": "ATTEMPTS = 4\n",
+        "serving/engine.py": (tmp_path / "serving/engine.py").read_text(),
+    })
+    assert rule_ids(findings) == ["TAX003"]
+    assert "4 jitted dispatch(es)" in findings[0].message
 
 
 def test_tax003_branch_arms_take_the_max_not_the_sum(tmp_path):
@@ -839,7 +908,7 @@ def test_tree_is_clean():
         [REPO / "src", REPO / "benchmarks", REPO / "examples",
          REPO / "tests"])
     assert findings == [], "\n".join(f.render() for f in findings)
-    assert nfiles >= 96
+    assert nfiles >= 100
     assert all(f.justification for f in suppressed)
     # pinned suppression inventory: the engine's four once-per-dispatch
     # token readbacks (pure megatick, mixed megatick, and the two

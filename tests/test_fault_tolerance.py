@@ -1,14 +1,10 @@
-"""Fault tolerance: preemption, heartbeats, stragglers, elastic remesh,
-and full train->checkpoint->resume equivalence."""
+"""Fault tolerance: preemption, heartbeats, stragglers, and full
+train->checkpoint->resume equivalence."""
 import json
 import time
 
-import numpy as np
-import pytest
-
 from repro.distributed.fault_tolerance import (Heartbeat, PreemptionGuard,
-                                               StragglerWatchdog,
-                                               plan_elastic_remesh)
+                                               StragglerWatchdog)
 
 
 def test_preemption_guard_flag():
@@ -28,6 +24,20 @@ def test_heartbeat_dead_host_detection(tmp_path):
     assert hb.dead_hosts(now=now) == [1]
 
 
+def test_heartbeat_in_memory_no_file():
+    """path=None keeps liveness in memory — the serving hot loop must
+    never touch the filesystem, and a fake clock needs no sleeping."""
+    t = [1000.0]
+    hb = Heartbeat(path=None, host_id=3, timeout_s=5.0,
+                   clock=lambda: t[0])
+    hb.beat(1)
+    assert hb.dead_hosts() == []
+    t[0] += 100.0
+    assert hb.dead_hosts() == [3]
+    hb.beat(2)                       # fresh beat revives the host
+    assert hb.dead_hosts() == []
+
+
 def test_straggler_watchdog():
     w = StragglerWatchdog(factor=2.0, window=20)
     for s in range(15):
@@ -36,13 +46,19 @@ def test_straggler_watchdog():
     assert w.summary()["n_slow"] == 1
 
 
-@pytest.mark.parametrize("chips,expect_model", [(512, 16), (256, 16),
-                                                (128, 16), (48, 16), (8, 8)])
-def test_elastic_remesh_keeps_tp(chips, expect_model):
-    shape = plan_elastic_remesh(chips, prefer_model=16)
-    assert shape[-1] == min(expect_model, chips)
-    prod = int(np.prod(shape))
-    assert prod <= chips
+def test_straggler_watchdog_timed_monotonic():
+    w = StragglerWatchdog(factor=2.0, window=20, min_samples=3)
+    t0 = time.monotonic()
+    assert w.timed(0, t0) in (True, False)   # records without error
+    assert len(w._times) == 1
+    assert w._times[0] >= 0.0                # monotonic deltas only
+
+
+def test_plan_elastic_remesh_deleted():
+    """The dead remesh helper was deleted, not left half-wired: serving
+    re-meshes by restoring a checkpoint into a freshly built engine."""
+    import repro.distributed.fault_tolerance as ft
+    assert not hasattr(ft, "plan_elastic_remesh")
 
 
 def test_train_resume_equivalence(tmp_path):

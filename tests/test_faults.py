@@ -1,0 +1,375 @@
+"""Robustness plane: seeded fault injection, per-request isolation,
+bounded retry, degraded modes, and drain->restore resume.
+
+The invariant under test everywhere is the TOKEN-IDENTITY contract:
+because every stream depends only on its own history and its own
+(seed, rid, token-index)-folded sampler keys, a fault that touches one
+slot — poisoned logits, a transient dispatch failure, a pool spike, a
+preemption drain — must leave every OTHER stream byte-identical to a
+fault-free run. Recovery is correct when it is invisible.
+
+Engine-level tests drive ``Engine.tick`` directly with a
+:class:`repro.serving.faults.FaultPlan`; server-level tests boot the
+asyncio front-end on an ephemeral port and prove the same properties
+over real sockets (error events, drains, socket drops + client retry).
+"""
+import asyncio
+import functools
+
+import jax
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.launch.server import Server
+from repro.models import lm
+from repro.serving import client as cl
+from repro.serving.engine import Engine, Request
+from repro.serving.faults import (DISPATCH_ATTEMPTS, DegradedModeController,
+                                  DispatchFailedError, FaultPlan, FaultSpec,
+                                  backoff_s)
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    cfg = smoke_config(get_config("llama3-8b")).replace(n_layers=1)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(batch=2, **kw):
+    cfg, params = _setup()
+    kw.setdefault("decode_steps", 4)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("n_blocks", 24)
+    return Engine(params, cfg, batch=batch, max_len=64, prefill_chunk=8,
+                  **kw)
+
+
+PROMPTS = ([11, 12, 13, 14, 15, 16, 17, 18, 19, 20,
+            21, 22, 23, 24, 25, 26, 27, 28],
+           [31, 32, 33, 34, 35, 36, 37, 38, 39, 40,
+            41, 42, 43, 44, 45, 46])
+
+
+def _run(fault_plan=None, n_new=(8, 8), **kw):
+    """Submit the two reference prompts, run to completion, return the
+    (requests, engine) pair."""
+    eng = _engine(fault_plan=fault_plan, **kw)
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=n)
+            for i, (p, n) in enumerate(zip(PROMPTS, n_new))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return reqs, eng
+
+
+@functools.lru_cache(maxsize=1)
+def _reference():
+    """Fault-free tokens for the two reference prompts."""
+    reqs, _ = _run()
+    return tuple(tuple(r.out_tokens) for r in reqs)
+
+
+# ----------------------------------------------------------- plan mechanics
+def test_fault_plan_fires_once_per_site_and_tick():
+    plan = FaultPlan([FaultSpec("dispatch", tick=2),
+                      FaultSpec("tokens", tick=2, slot=1)])
+    assert plan.poll("dispatch", 1) is None      # wrong tick
+    spec = plan.poll("dispatch", 2)
+    assert spec is not None and spec.site == "dispatch"
+    assert plan.poll("dispatch", 2) is None      # at-most-once
+    assert plan.injected == 1
+    assert [f.site for f in plan.pending()] == ["tokens"]
+
+
+def test_fault_plan_rejects_duplicate_key():
+    with pytest.raises(ValueError):
+        FaultPlan([FaultSpec("pool", tick=3), FaultSpec("pool", tick=3)])
+
+
+def test_backoff_schedule_is_deterministic():
+    """Engine-side backoff is a pure function of the attempt number —
+    a retried chaos run replays the exact same wait schedule."""
+    sched = [backoff_s(a, 0.05, 2.0) for a in (1, 2, 3, 4)]
+    assert sched == [0.05, 0.1, 0.2, 0.4]
+    assert backoff_s(10, 0.05, 0.2) == 0.2       # capped
+    assert backoff_s(0, 0.05, 2.0) == 0.0
+
+
+# ----------------------------------------------------- transient dispatch
+def test_transient_dispatch_retry_is_token_invisible():
+    """A dispatch that fails transiently and succeeds on retry must
+    produce byte-identical streams: retries replay the same inputs
+    because pool state only commits on success."""
+    plan = FaultPlan([FaultSpec("dispatch", tick=1,
+                                count=DISPATCH_ATTEMPTS - 1)])
+    reqs, eng = _run(fault_plan=plan)
+    assert tuple(tuple(r.out_tokens) for r in reqs) == _reference()
+    assert eng.dispatch_retry_count == DISPATCH_ATTEMPTS - 1
+    assert eng.dispatch_failure_count == 0
+    assert eng.metrics(list(reqs))["dispatch_retries"] \
+        == DISPATCH_ATTEMPTS - 1
+
+
+def test_dispatch_retry_exhaustion_raises_then_engine_recovers():
+    """count >= DISPATCH_ATTEMPTS exhausts the bounded retry budget:
+    the tick raises DispatchFailedError (the SERVER's containment
+    layer maps it to per-request errors) — and because the fault spec
+    is consumed, the very next tick proceeds normally."""
+    plan = FaultPlan([FaultSpec("dispatch", tick=1,
+                                count=DISPATCH_ATTEMPTS)])
+    eng = _engine(fault_plan=plan)
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=8)
+            for i, p in enumerate(PROMPTS)]
+    for r in reqs:
+        eng.submit(r)
+    with pytest.raises(DispatchFailedError):
+        eng.tick()
+    assert eng.dispatch_failure_count == 1
+    eng.run()                                    # engine survives
+    assert tuple(tuple(r.out_tokens) for r in reqs) == _reference()
+
+
+# ------------------------------------------------------- poisoned logits
+def test_poisoned_slot_retires_error_survivor_identical():
+    """NaN/Inf logits (surfacing as out-of-range sampled ids) retire
+    ONLY the poisoned slot through the abort path; the co-batched
+    survivor's stream is byte-identical to the fault-free run and the
+    victim keeps exactly its pre-poison tokens."""
+    plan = FaultPlan([FaultSpec("tokens", tick=4, slot=0)])
+    reqs, eng = _run(fault_plan=plan)
+    victim, survivor = reqs[0], reqs[1]
+    ref_v, ref_s = _reference()
+    assert victim.finish_reason == "error" and victim.done
+    assert victim.error is not None
+    assert tuple(victim.out_tokens) == ref_v[:len(victim.out_tokens)]
+    assert len(victim.out_tokens) < len(ref_v)
+    assert tuple(survivor.out_tokens) == ref_s
+    assert eng.error_count == 1
+    m = eng.metrics(list(reqs))
+    assert m["errors"] == 1 and m["faults_injected"] == 1
+    # the poisoned slot's blocks are back in the pool, not leaked
+    assert eng.pool.blocks_in_use == 0 or not eng.active
+
+
+def test_poisoned_kv_never_enters_prefix_cache():
+    """A second identical submission after a poison must not reuse
+    beyond the victim's CLEAN history: re-running the victim's prompt
+    produces the fault-free reference, not the poisoned tail."""
+    plan = FaultPlan([FaultSpec("tokens", tick=4, slot=0)])
+    _, eng = _run(fault_plan=plan)
+    redo = Request(rid=7, prompt=list(PROMPTS[0]), max_new_tokens=8)
+    eng.submit(redo)
+    eng.run()
+    assert tuple(redo.out_tokens) == _reference()[0]
+
+
+# ------------------------------------------------------------- pool spike
+def test_pool_spike_is_token_invisible_and_released():
+    """A transient block-pool exhaustion spike may stall admission but
+    must not change a single token, and the seized blocks go back."""
+    plan = FaultPlan([FaultSpec("pool", tick=1, blocks=8, hold_ticks=2)])
+    reqs, eng = _run(fault_plan=plan)
+    assert tuple(tuple(r.out_tokens) for r in reqs) == _reference()
+    assert eng.pool.blocks_seized == 8
+    assert not eng.pool._seized                  # released after hold
+
+
+# ------------------------------------------------------- degraded ladder
+def test_degraded_controller_trips_and_recovers():
+    c = DegradedModeController(trip_after=2, recover_after=3)
+    assert c.observe(True) == 0                  # streak building
+    assert c.observe(True) == 1                  # tripped
+    assert c.observe(True) == 1
+    assert c.observe(True) == 2                  # second trip
+    for _ in range(2):
+        assert c.observe(False) == 2             # not yet recovered
+    assert c.observe(False) == 1                 # stepped back up
+    assert c.transitions == 3
+
+
+def test_degraded_engine_shrinks_k_tokens_identical():
+    """Sustained adverse ticks walk the engine down the ladder (K
+    halves, then K=1 + masked gather) — and because megatick length
+    and gather mode are identity-invariant by construction, the
+    degraded run's tokens still match the fault-free reference."""
+    plan = FaultPlan([FaultSpec("dispatch", tick=t, count=1)
+                      for t in (1, 2, 3)])
+    reqs, eng = _run(fault_plan=plan, n_new=(12, 12),
+                     degraded=DegradedModeController(trip_after=2,
+                                                     recover_after=50))
+    ref = _run(n_new=(12, 12))[0]
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]
+    assert eng.degraded.level >= 1               # ladder engaged
+    assert eng.eff_decode_steps < eng.decode_steps
+    assert eng.metrics(list(reqs))["degraded_mode"] >= 1
+
+
+# --------------------------------------------------------- drain/restore
+def test_drain_snapshot_restore_resumes_as_prefix_hits(tmp_path):
+    """Kill-and-resume: drain mid-decode, snapshot through the
+    Checkpointer, restore into a FRESH engine — every unfinished
+    request finishes with tokens byte-identical to the uninterrupted
+    run, and its already-computed KV is served as prefix hits."""
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    eng = _engine()
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=8)
+            for i, p in enumerate(PROMPTS)]
+    for r in reqs:
+        eng.submit(r)
+    eng.tick()
+    eng.tick()
+    assert any(not r.done for r in reqs)
+    step = eng.snapshot(Checkpointer(str(tmp_path)))
+
+    fresh = _engine()
+    restored = fresh.restore(Checkpointer(str(tmp_path)), step)
+    rids = {r.rid for r in restored}
+    assert rids == {r.rid for r in reqs if not r.done}
+    hits0 = fresh.pool.prefix_hits
+    fresh.run()
+    by_rid = {r.rid: r for r in restored}
+    for orig, ref in zip(reqs, _reference()):
+        if orig.rid in by_rid:
+            assert tuple(by_rid[orig.rid].out_tokens) == ref
+    assert fresh.pool.prefix_hits > hits0        # resumed, not redone
+    assert all(by_rid[r].reused_tokens > 0 for r in rids)
+
+
+def test_restore_refuses_mismatched_identity(tmp_path):
+    """A snapshot taken under one (sampler, seed) must not silently
+    resume under another — every stream would diverge."""
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    eng = _engine()
+    eng.submit(Request(rid=0, prompt=list(PROMPTS[0]),
+                       max_new_tokens=8))
+    eng.tick()
+    eng.snapshot(Checkpointer(str(tmp_path)))
+    other = _engine(seed=1)
+    with pytest.raises(ValueError, match="sampler/seed"):
+        other.restore(Checkpointer(str(tmp_path)))
+
+
+# ------------------------------------------------------------ over the wire
+async def _poll_ready(host, port, want: bool, timeout_s=10.0):
+    for _ in range(int(timeout_s / 0.1)):
+        status, body = await cl.request_json(host, port, "GET", "/readyz")
+        if body.get("ready") is want:
+            return status, body
+        await asyncio.sleep(0.1)
+    return await cl.request_json(host, port, "GET", "/readyz")
+
+
+def test_server_tick_failure_becomes_sse_error_and_survives():
+    """A megatick that raises out of the engine (retry budget
+    exhausted) fails the REQUESTS — per-request SSE error events —
+    while the drive loop keeps serving the next submission."""
+    async def run():
+        plan = FaultPlan([FaultSpec("dispatch", tick=1,
+                                    count=DISPATCH_ATTEMPTS)])
+        srv = Server(_engine(fault_plan=plan), port=0)
+        await srv.start()
+        try:
+            bad = await cl.complete(srv.host, srv.port, [1, 2, 3],
+                                    max_new_tokens=4)
+            assert bad.error is not None
+            assert "megatick failed" in bad.error
+            ok = await cl.complete(srv.host, srv.port, [1, 2, 3],
+                                   max_new_tokens=4)
+            assert ok.ok and ok.finish_reason == "length"
+            m = await cl.metrics(srv.host, srv.port)
+            assert m["server_tick_failures"] == 1
+            assert m["dispatch_failures"] == 1
+        finally:
+            await srv.stop()
+    asyncio.run(run())
+
+
+def test_server_poisoned_slot_errors_one_stream_only():
+    async def run():
+        # poison several ticks (slot 0 only retires once, extra pokes
+        # on a freed slot are no-ops) so wire-arrival jitter cannot
+        # miss the emission window
+        plan = FaultPlan([FaultSpec("tokens", tick=t, slot=0)
+                          for t in (3, 4, 5)])
+        srv = Server(_engine(fault_plan=plan), port=0)
+        await srv.start()
+        try:
+            a, b = await asyncio.gather(
+                cl.complete(srv.host, srv.port, list(PROMPTS[0]),
+                            max_new_tokens=8),
+                cl.complete(srv.host, srv.port, list(PROMPTS[1]),
+                            max_new_tokens=8))
+            failed = [c for c in (a, b) if c.error is not None]
+            finished = [c for c in (a, b) if c.finish_reason == "length"]
+            assert len(failed) == 1 and len(finished) == 1
+            assert tuple(finished[0].token_ids) in _reference()
+        finally:
+            await srv.stop()
+    asyncio.run(run())
+
+
+def test_server_socket_drop_recovered_by_client_retry():
+    """Injected socket drop severs the SSE stream mid-flight; the
+    client's retry resubmits and — because the dropped request's KV
+    stays prefix-registered — completes with the full token stream."""
+    async def run():
+        plan = FaultPlan([FaultSpec("socket", tick=2)])
+        srv = Server(_engine(fault_plan=plan), port=0)
+        await srv.start()
+        try:
+            out = await cl.complete(srv.host, srv.port, list(PROMPTS[0]),
+                                    max_new_tokens=8, retries=2)
+            assert out.ok and out.finish_reason == "length"
+            assert out.retries >= 1
+            assert tuple(out.token_ids) == _reference()[0]
+            m = await cl.metrics(srv.host, srv.port)
+            assert m["faults_injected"] >= 1
+        finally:
+            await srv.stop()
+    asyncio.run(run())
+
+
+def test_server_drain_checkpoints_and_goes_unready(tmp_path):
+    """POST /admin/drain: intake stops (503 + Retry-After), in-flight
+    work past the grace window is checkpointed, streams end with an
+    error naming the step, /readyz flips to 503."""
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    async def run():
+        srv = Server(_engine(), port=0, ckpt_dir=str(tmp_path),
+                     drain_grace_s=0.0)
+        await srv.start()
+        try:
+            stream = asyncio.create_task(cl.complete(
+                srv.host, srv.port, list(PROMPTS[0]),
+                max_new_tokens=40))
+            while True:                     # wait until it is running
+                _, hz = await cl.request_json(srv.host, srv.port,
+                                              "GET", "/healthz")
+                if hz.get("inflight"):
+                    break
+                await asyncio.sleep(0.02)
+            status, body = await cl.request_json(
+                srv.host, srv.port, "POST", "/admin/drain")
+            assert status == 200 and body["draining"]
+            out = await stream
+            assert out.error is not None and "checkpoint" in out.error
+            status, body = await _poll_ready(srv.host, srv.port, False)
+            assert status == 503 and not body["ready"]
+            refused = await cl.complete(srv.host, srv.port, [1, 2, 3])
+            assert refused.status == 503
+            assert refused.retry_after is not None
+        finally:
+            await srv.stop()
+        ckpt = Checkpointer(str(tmp_path))
+        assert ckpt.latest_step() is not None
+        fresh = _engine()
+        restored = fresh.restore(ckpt)
+        assert len(restored) == 1
+        fresh.run()
+        assert len(restored[0].out_tokens) == 40
+        assert restored[0].reused_tokens > 0
+    asyncio.run(run())
